@@ -1,0 +1,21 @@
+"""Abstract claim — "Canal enables fast design space exploration": IR
+generation + hardware lowering speed vs array size, plus end-to-end
+generate+PnR wall time for one DSE point."""
+from __future__ import annotations
+
+from repro.core.dse import generation_speed
+
+from .common import emit, save_json, timed
+
+
+def run(quick: bool = False):
+    sizes = (4, 8, 16) if quick else (4, 8, 16, 32)
+    recs, us = timed(lambda: generation_speed(sizes))
+    lines = []
+    for r in recs:
+        lines.append(emit(
+            f"dse_speed/array={r['size']}x{r['size']}", us / len(recs),
+            f"nodes={r['nodes']} gen={r['gen_seconds'] * 1e3:.0f}ms "
+            f"lower={r['lower_seconds'] * 1e3:.0f}ms"))
+    save_json("dse_speed", recs)
+    return lines

@@ -1,0 +1,24 @@
+"""Fig. 8 — SB area: static baseline vs depth-2 FIFO vs split FIFO.
+
+Paper: full FIFOs +54 % area over the static baseline; split FIFOs +32 %.
+"""
+from __future__ import annotations
+
+from repro.core.dse import fifo_area_study
+
+from .common import emit, save_json, timed
+
+
+def run(quick: bool = False):
+    recs, us = timed(lambda: fifo_area_study())
+    lines = []
+    for r in recs:
+        lines.append(emit(f"fig08/{r['design']}", us / len(recs),
+                          f"sb_area={r['sb_area']:.0f}um2 "
+                          f"overhead={r['overhead'] * 100:+.1f}%"))
+    save_json("fig08_fifo_area", recs)
+    full = next(r for r in recs if r["design"] == "fifo_full")
+    split = next(r for r in recs if r["design"] == "fifo_split")
+    assert abs(full["overhead"] - 0.54) < 0.03, "Fig8 full-FIFO ratio drift"
+    assert abs(split["overhead"] - 0.32) < 0.03, "Fig8 split-FIFO ratio drift"
+    return lines

@@ -1,0 +1,38 @@
+"""§4.2.1 (Fig. 9 topologies) — Wilton vs Disjoint routability.
+
+Paper: "the Wilton topology performs much better than the Disjoint
+topology, which failed to route in all of our test cases."
+"""
+from __future__ import annotations
+
+from repro.core.dse import sweep_sb_topology
+from repro.core.edsl import SwitchBoxType
+from repro.core.pnr.app import BENCH_APPS
+
+from .common import emit, save_json, timed
+
+
+def run(quick: bool = False):
+    from repro.core.pnr.app import app_butterfly
+    apps = {"butterfly3": lambda: app_butterfly(3)}
+    if not quick:
+        apps.update({k: BENCH_APPS[k] for k in ("tree_reduce", "fir")})
+    # depopulated track connections (Fc=0.5) stress the topology, as the
+    # paper's larger application suite does
+    recs, us = timed(lambda: sweep_sb_topology(
+        (SwitchBoxType.WILTON, SwitchBoxType.DISJOINT), apps=apps,
+        num_tracks=4, width=8, height=8, sa_steps=60, track_fc=0.5))
+    lines = []
+    for r in recs:
+        lines.append(emit(
+            f"fig09/{r['topology']}", us / len(recs),
+            f"routed={r['n_routed']}/{r['n_apps']} "
+            f"sb_area={r['sb_area']:.0f}um2"))
+    save_json("fig09_topology", recs)
+    wil = next(r for r in recs if r["topology"] == "wilton")
+    dis = next(r for r in recs if r["topology"] == "disjoint")
+    assert wil["n_routed"] > dis["n_routed"], \
+        "Wilton should out-route Disjoint"
+    assert abs(wil["sb_area"] - dis["sb_area"]) < 1e-6, \
+        "paper: same area for both topologies"
+    return lines

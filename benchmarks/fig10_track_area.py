@@ -1,0 +1,33 @@
+"""Fig. 10 — SB and CB area vs number of routing tracks (area only)."""
+from __future__ import annotations
+
+from repro.core.area import connection_box_area, switch_box_area
+from repro.core.edsl import create_uniform_interconnect
+
+from .common import emit, save_json, timed
+
+
+def run(quick: bool = False):
+    tracks = (2, 3, 4, 5, 6, 8, 10)
+    recs = []
+
+    def build():
+        for t in tracks:
+            ic = create_uniform_interconnect(width=8, height=8,
+                                             num_tracks=t, reg_density=1.0)
+            recs.append({"num_tracks": t,
+                         "sb_area": switch_box_area(ic),
+                         "cb_area": connection_box_area(ic)})
+        return recs
+
+    _, us = timed(build)
+    lines = []
+    for r in recs:
+        lines.append(emit(f"fig10/tracks={r['num_tracks']}", us / len(recs),
+                          f"sb={r['sb_area']:.0f}um2 cb={r['cb_area']:.0f}um2"))
+    save_json("fig10_track_area", recs)
+    sb = [r["sb_area"] for r in recs]
+    cb = [r["cb_area"] for r in recs]
+    assert all(b > a for a, b in zip(sb, sb[1:])), "SB area must grow"
+    assert all(b > a for a, b in zip(cb, cb[1:])), "CB area must grow"
+    return lines

@@ -1,0 +1,44 @@
+"""Fig. 13 — SB / CB area vs number of core-port connection sides
+(Fig. 12 reduction: 4 -> 3 (drop east) -> 2 (drop south))."""
+from __future__ import annotations
+
+from repro.core.area import connection_box_area, switch_box_area
+from repro.core.edsl import create_uniform_interconnect
+
+from .common import emit, save_json, timed
+
+
+def run(quick: bool = False):
+    recs = []
+
+    def build():
+        for kind in ("sb", "cb"):
+            for sides in (4, 3, 2):
+                kw = {f"{kind}_sides": sides}
+                ic = create_uniform_interconnect(width=8, height=8,
+                                                 num_tracks=5,
+                                                 reg_density=1.0, **kw)
+                recs.append({
+                    "kind": kind, "sides": sides,
+                    "sb_area": switch_box_area(ic),
+                    "cb_area": connection_box_area(ic)})
+        return recs
+
+    _, us = timed(build)
+    lines = []
+    for r in recs:
+        lines.append(emit(
+            f"fig13/{r['kind']}_sides={r['sides']}", us / len(recs),
+            f"sb={r['sb_area']:.0f}um2 cb={r['cb_area']:.0f}um2"))
+    save_json("fig13_port_area", recs)
+    sb_rows = [r for r in recs if r["kind"] == "sb"]
+    cb_rows = [r for r in recs if r["kind"] == "cb"]
+    assert sb_rows[0]["sb_area"] > sb_rows[-1]["sb_area"], \
+        "fewer SB core connections must shrink the SB"
+    assert cb_rows[0]["cb_area"] > cb_rows[-1]["cb_area"], \
+        "fewer CB connections must shrink the CB"
+    # paper: CB shrinks relatively more than SB
+    sb_drop = 1 - sb_rows[-1]["sb_area"] / sb_rows[0]["sb_area"]
+    cb_drop = 1 - cb_rows[-1]["cb_area"] / cb_rows[0]["cb_area"]
+    assert cb_drop > sb_drop, "CB depopulation should matter more (paper)"
+    return lines

@@ -1,0 +1,35 @@
+"""Figs. 14/15 — application run time vs SB / CB core-port connections.
+
+Paper: reducing SB-side connections has a small negative effect on run
+time; reducing CB-side connections has a larger one.
+"""
+from __future__ import annotations
+
+from repro.core.dse import sweep_port_connections
+from repro.core.pnr.app import BENCH_APPS
+
+from .common import emit, save_json, timed
+
+
+def run(quick: bool = False):
+    apps = {k: BENCH_APPS[k] for k in
+            (("tree_reduce", "butterfly") if quick else
+             ("pointwise", "tree_reduce", "fir", "butterfly"))}
+    lines = []
+    payload = {}
+    for kind in ("sb", "cb"):
+        recs, us = timed(lambda: sweep_port_connections(
+            kind, sides=(4, 3, 2), apps=apps, sa_steps=40))
+        for r in recs:
+            oks = [a for a in r["apps"].values() if a["success"]]
+            mean_crit = (sum(a["critical_path_ns"] for a in oks)
+                         / len(oks) if oks else float("inf"))
+            r["mean_critical_path_ns"] = mean_crit
+            lines.append(emit(
+                f"fig{'14' if kind == 'sb' else '15'}/"
+                f"{kind}_sides={r['sides']}", us / len(recs),
+                f"routed={len(oks)}/{len(r['apps'])} "
+                f"mean_crit={mean_crit:.2f}ns"))
+        payload[kind] = recs
+    save_json("fig14_15_port_runtime", payload)
+    return lines

@@ -1,0 +1,70 @@
+"""§Roofline — the full baseline table from the dry-run artifacts, plus
+the Canal-ICI congestion-aware collective refinement (DESIGN.md §2)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.ici import pod_collective_model
+
+from .common import emit, save_json
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, "*",
+                                              "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag"):
+            continue                      # perf-iteration variants
+        cells.append(rec)
+    return cells
+
+
+def run(quick: bool = False):
+    lines = []
+    table = []
+    for rec in load_cells("single"):
+        r = rec["roofline"]
+        ici = pod_collective_model(
+            rec["collectives"]["by_kind_traffic"], rec["mesh_axes"])
+        row = {
+            "arch": rec["arch"], "shape": rec["shape"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "roofline_fraction": r["roofline_fraction"],
+            "useful_flops_ratio": rec["useful_flops_ratio"],
+            "ici_congestion_factor": ici["congestion_factor"],
+            "ici_collective_s": ici["collective_time_s"],
+        }
+        table.append(row)
+        lines.append(emit(
+            f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+            f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+            f"coll={r['collective_s']:.4f}s dom={r['dominant']} "
+            f"frac={r['roofline_fraction']:.3f} "
+            f"useful={rec['useful_flops_ratio']:.2f} "
+            f"ici_cong={ici['congestion_factor']:.2f}"))
+    if not table:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return lines
+    save_json("roofline_table", table)
+
+    # hillclimb candidate selection (assignment: worst fraction, most
+    # collective-bound, most paper-representative)
+    worst = min(table, key=lambda r: r["roofline_fraction"])
+    coll = max(table, key=lambda r: r["collective_s"]
+               / max(r["compute_s"] + r["memory_s"], 1e-12))
+    lines.append(emit("roofline/worst_fraction", 0.0,
+                      f"{worst['arch']}/{worst['shape']} "
+                      f"frac={worst['roofline_fraction']:.3f}"))
+    lines.append(emit("roofline/most_collective_bound", 0.0,
+                      f"{coll['arch']}/{coll['shape']}"))
+    return lines

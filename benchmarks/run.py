@@ -1,0 +1,64 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig08]
+
+Prints ``name,us_per_call,derived`` CSV per benchmark and saves JSON
+records under benchmarks/results/ (consumed by EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced app/track sets")
+    ap.add_argument("--only", type=str, default=None,
+                    help="substring filter on benchmark module name")
+    args = ap.parse_args()
+
+    from . import (dse_speed, fig08_fifo_area, fig09_topology_routability,
+                   fig10_track_area, fig11_track_runtime, fig13_port_area,
+                   fig14_15_port_runtime)
+    try:
+        from . import kernels_bench
+    except Exception:                                  # pragma: no cover
+        kernels_bench = None
+    try:
+        from . import roofline_table
+    except Exception:                                  # pragma: no cover
+        roofline_table = None
+
+    mods = [fig08_fifo_area, fig10_track_area, fig13_port_area, dse_speed,
+            fig09_topology_routability, fig11_track_runtime,
+            fig14_15_port_runtime]
+    if kernels_bench is not None:
+        mods.append(kernels_bench)
+    if roofline_table is not None:
+        mods.append(roofline_table)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in mods:
+        name = mod.__name__.split(".")[-1]
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod.run(quick=args.quick)
+            print(f"# {name}: ok in {time.perf_counter() - t0:.1f}s",
+                  flush=True)
+        except Exception as e:                        # pragma: no cover
+            failures.append(name)
+            traceback.print_exc()
+            print(f"# {name}: FAILED ({e})", flush=True)
+    if failures:
+        sys.exit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Design-space exploration example (paper §4.2 in miniature): sweep
+switch-box topology and track count, report area + routability + critical
+path, and run the same Canal router on a TPU-pod traffic pattern
+(the beyond-paper ICI integration).
+
+    PYTHONPATH=src python examples/cgra_dse.py
+"""
+import numpy as np
+
+from repro.core.area import connection_box_area, switch_box_area
+from repro.core.dse import sweep_num_tracks, sweep_sb_topology
+from repro.core.edsl import SwitchBoxType
+from repro.core.ici import pod_collective_model, route_traffic_canal
+from repro.core.pnr.app import app_butterfly
+
+
+def main():
+    print("== topology DSE (Wilton vs Disjoint, Fc=0.5) ==")
+    recs = sweep_sb_topology(
+        (SwitchBoxType.WILTON, SwitchBoxType.DISJOINT),
+        apps={"butterfly3": lambda: app_butterfly(3)},
+        num_tracks=4, sa_steps=40, track_fc=0.5)
+    for r in recs:
+        print(f"  {r['topology']:9s} routed {r['n_routed']}/{r['n_apps']} "
+              f"sb_area={r['sb_area']:.0f}um2")
+
+    print("== track-count DSE ==")
+    recs = sweep_num_tracks((2, 4, 6),
+                            apps={"butterfly3": lambda: app_butterfly(3)},
+                            sa_steps=40, track_fc=0.5)
+    for r in recs:
+        ok = [a for a in r["apps"].values() if a["success"]]
+        crit = (sum(a["critical_path_ns"] for a in ok) / len(ok)
+                if ok else float("nan"))
+        print(f"  tracks={r['num_tracks']} sb={r['sb_area']:.0f}um2 "
+              f"cb={r['cb_area']:.0f}um2 routed={len(ok)} "
+              f"crit={crit:.2f}ns")
+
+    print("== pod-fabric DSE (Canal router on the ICI torus) ==")
+    rng = np.random.default_rng(0)
+    flows = [((int(rng.integers(0, 4)), int(rng.integers(0, 4))),
+              (int(rng.integers(0, 4)), int(rng.integers(0, 4))))
+             for _ in range(10)]
+    flows = [(s, d) for s, d in flows if s != d]
+    result, usage = route_traffic_canal(4, 4, flows)
+    print(f"  {len(result.nets)} flows routed in "
+          f"{result.iterations} PathFinder iterations, "
+          f"max transit usage {usage.max()}")
+    out = pod_collective_model({"all-reduce": 1e9, "all-gather": 4e8},
+                               {"data": 16, "model": 16})
+    print(f"  collective model: congestion x{out['congestion_factor']:.2f}"
+          f" -> {out['collective_time_s'] * 1e3:.2f} ms "
+          f"(naive {out['naive_time_s'] * 1e3:.2f} ms)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Serving example: batched greedy decoding with the slot-based engine
+(prefill + KV-cache decode), on a smoke-scale model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+
+def main():
+    cfg = get_smoke("tinyllama_1_1b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_size=4, max_seq=96)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(3, cfg.vocab_size - 1, size=n)
+               .astype(np.int32) for n in (5, 9, 7, 3, 6)]
+    outs = engine.generate(prompts, max_new_tokens=12)
+    for i, (p, o) in enumerate(zip(prompts, outs)):
+        print(f"req{i}: prompt={list(p)} -> generated={o}")
+    assert all(len(o) >= 1 for o in outs)
+    # determinism: same batch -> same greedy outputs
+    again = engine.generate(prompts, max_new_tokens=12)
+    assert again == outs, "greedy decode must be deterministic"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

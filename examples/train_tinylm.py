@@ -1,0 +1,72 @@
+"""End-to-end training driver: train a ~smoke-scale LM for a few hundred
+steps on CPU with the full production substrate — synthetic data pipeline,
+AdamW + cosine schedule, checkpointing, fault-tolerant supervisor with an
+injected mid-run failure, and straggler monitoring.
+
+    PYTHONPATH=src python examples/train_tinylm.py [--steps 200]
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_smoke
+from repro.data import SyntheticTokens
+from repro.models import build_model
+from repro.optim import adamw, cosine_schedule
+from repro.runtime import StragglerMonitor, Supervisor
+from repro.train.step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", type=str, default="tinyllama_1_1b")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch).replace(ce_seq_chunk=32, moe_groups=2)
+    model = build_model(cfg)
+    opt = adamw(cosine_schedule(3e-3, 20, args.steps))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(state.params))
+    print(f"{cfg.name}: {n_params / 1e6:.2f}M params (smoke config)")
+
+    ds = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=64,
+                         global_batch=8, seed=0)
+    step_fn = jax.jit(make_train_step(model, opt, microbatches=2))
+
+    fail_once = {args.steps // 2}
+
+    def injector(step):
+        if step in fail_once:
+            fail_once.discard(step)
+            return RuntimeError("injected failure (fault-tolerance demo)")
+        return None
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        sup = Supervisor(
+            step_fn=step_fn,
+            batch_fn=lambda s: {k: jnp.asarray(v)
+                                for k, v in ds.batch(s).items()},
+            ckpt=CheckpointManager(ckpt_dir, keep=2),
+            ckpt_every=25,
+            monitor=StragglerMonitor(n_hosts=4),
+            failure_injector=injector)
+        state = sup.run(state, start_step=0, num_steps=args.steps)
+
+    losses = [h["metrics"]["loss"] for h in sup.history
+              if h["event"] == "step"]
+    restarts = sum(1 for h in sup.history if h["event"] == "restart")
+    print(f"steps run: {len(losses)} (incl. replay after {restarts} "
+          f"restart)")
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "training must reduce loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

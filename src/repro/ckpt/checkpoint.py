@@ -1,0 +1,146 @@
+"""Sharded checkpointing with atomic manifests and async writes.
+
+Layout:  <dir>/step_<N>.tmp/ -> atomically renamed to <dir>/step_<N>/
+         leaf files: <flat-key>.npy ;  manifest.json: treedef + dtypes +
+         shapes + step. A LATEST file points at the newest complete step.
+
+On restore, arrays are device_put against the *target* example pytree's
+shardings, so a checkpoint written on one mesh restores onto another
+(elastic restart / topology change). Writes happen on a background thread
+(training continues; `wait()` joins before the next save or exit).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Any, blocking: bool = False) -> None:
+        self.wait()
+        items, _ = _flatten(state)
+        host_items = []
+        for k, v in items:
+            arr = np.asarray(v)
+            # np.save can't represent bfloat16: store the bit pattern
+            if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+                host_items.append((k, arr.view(np.uint16), "bfloat16"))
+            else:
+                host_items.append((k, arr, str(arr.dtype)))
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "leaves": []}
+            for i, (key, arr, dtype_name) in enumerate(host_items):
+                fname = f"leaf_{i}.npy"
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"].append(
+                    {"key": key, "file": fname,
+                     "shape": list(arr.shape), "dtype": dtype_name})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)                      # atomic publish
+            with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+                f.write(str(step))
+            os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                       os.path.join(self.dir, "LATEST"))
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.available_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def available_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            step = int(f.read().strip())
+        if step in self.available_steps():
+            return step
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any) -> Any:
+        """Restore into the structure/shardings of ``like``."""
+        final = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(final, "manifest.json")) as f:
+            manifest = json.load(f)
+        items, treedef = _flatten(like)
+        if len(items) != len(manifest["leaves"]):
+            raise ValueError("checkpoint/state structure mismatch")
+        leaves = []
+        for (key, target), meta in zip(items, manifest["leaves"]):
+            if meta["key"] != key:
+                raise ValueError(
+                    f"leaf order mismatch: {meta['key']} != {key}")
+            arr = np.load(os.path.join(final, meta["file"]))
+            if meta["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            if list(arr.shape) != list(np.shape(target)):
+                raise ValueError(f"shape mismatch at {key}")
+            sharding = getattr(target, "sharding", None)
+            if sharding is not None:
+                leaves.append(jax.device_put(arr, sharding))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_latest(self, like: Any) -> Optional[Tuple[Any, int]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, like), step

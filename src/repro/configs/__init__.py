@@ -1,0 +1,86 @@
+"""Assigned-architecture configs (``--arch <id>``).
+
+Each module defines ``FULL`` (the exact published config from the
+assignment table) and ``smoke()`` (a reduced same-family config for CPU
+tests). ``get_config(name)`` / ``list_archs()`` are the public API;
+``input_specs`` builds ShapeDtypeStruct stand-ins for the dry-run.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+
+_ARCHS = [
+    "tinyllama_1_1b",
+    "phi3_mini_3_8b",
+    "deepseek_coder_33b",
+    "qwen3_14b",
+    "kimi_k2_1t_a32b",
+    "granite_moe_3b_a800m",
+    "internvl2_2b",
+    "recurrentgemma_2b",
+    "whisper_medium",
+    "mamba2_1_3b",
+    "cgra_amber",            # the paper's own CGRA config (Canal side)
+]
+
+ALIASES = {name.replace("_", "-"): name for name in _ARCHS}
+
+
+def canonical(name: str) -> str:
+    name = name.replace("-", "_").replace(".", "_")
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {_ARCHS}")
+    return name
+
+
+def list_archs(lm_only: bool = True) -> List[str]:
+    return [a for a in _ARCHS if not (lm_only and a == "cgra_amber")]
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.FULL
+
+
+def get_smoke(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.smoke()
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell
+    (weak-type correct, shardable, no device allocation)."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        s = shape.seq_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        s = shape.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    if cfg.vlm is not None and shape.kind != "decode":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.vlm.num_patches, cfg.vlm.d_patch), jnp.bfloat16)
+    if cfg.encdec is not None and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encdec.encoder_seq, cfg.encdec.d_frame), jnp.bfloat16)
+    return specs
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k needs sub-quadratic attention (DESIGN.md
+    §Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False
+    return True

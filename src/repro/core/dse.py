@@ -1,0 +1,157 @@
+"""Design-space exploration harness (§4.2).
+
+One function per DSE axis from the paper: switch-box topology, number of
+routing tracks, and SB/CB core-port connections — plus the FIFO study of
+§4.1. Each returns a list of records consumed by the figure benchmarks and
+the tests.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .area import connection_box_area, switch_box_area
+from .edsl import SwitchBoxType, create_uniform_interconnect
+from .pnr import place_and_route
+from .pnr.app import BENCH_APPS
+
+
+def _run_apps(ic, apps: Dict[str, Callable], sa_steps: int = 60,
+              sa_batch: int = 16, alphas=(2.0,),
+              split_fifo_ctrl_delay: float = 0.0) -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {}
+    from .pnr.route import RoutingResources
+    res = RoutingResources(ic)
+    for name, mk in apps.items():
+        r = place_and_route(ic, mk(), alphas=alphas, sa_steps=sa_steps,
+                            sa_batch=sa_batch, resources=res,
+                            split_fifo_ctrl_delay=split_fifo_ctrl_delay)
+        out[name] = {
+            "success": r.success,
+            "critical_path_ns": r.timing.get("critical_path_ns", float("inf")),
+            "wirelength": r.wirelength,
+            "route_iterations": r.route_iterations,
+            "seconds": r.seconds,
+            "error": r.error,
+        }
+    return out
+
+
+def fifo_area_study(num_tracks: int = 5, track_width: int = 16
+                    ) -> List[Dict]:
+    """§4.1 / Fig. 8: static baseline vs full-FIFO vs split-FIFO SB area."""
+    ic = create_uniform_interconnect(width=8, height=8,
+                                     num_tracks=num_tracks,
+                                     track_width=track_width,
+                                     sb_type=SwitchBoxType.WILTON,
+                                     reg_density=1.0)
+    base = switch_box_area(ic)
+    recs = [{"design": "static_baseline", "sb_area": base, "overhead": 0.0}]
+    for mode in ("full", "split"):
+        a = switch_box_area(ic, rv=mode)
+        recs.append({"design": f"fifo_{mode}", "sb_area": a,
+                     "overhead": a / base - 1.0})
+    return recs
+
+
+def sweep_num_tracks(tracks: Sequence[int] = (2, 3, 4, 5, 6),
+                     apps: Optional[Dict[str, Callable]] = None,
+                     width: int = 8, height: int = 8,
+                     sa_steps: int = 60, track_fc: float = 1.0
+                     ) -> List[Dict]:
+    """§4.2.1 / Figs. 10–11: SB/CB area and application runtime vs tracks."""
+    apps = apps or BENCH_APPS
+    recs = []
+    for t in tracks:
+        ic = create_uniform_interconnect(width=width, height=height,
+                                         num_tracks=t, io_ring=True,
+                                         sb_type=SwitchBoxType.WILTON,
+                                         reg_density=1.0,
+                                         cb_track_fc=track_fc,
+                                         sb_track_fc=track_fc)
+        t0 = time.perf_counter()
+        results = _run_apps(ic, apps, sa_steps=sa_steps)
+        recs.append({
+            "num_tracks": t,
+            "sb_area": switch_box_area(ic),
+            "cb_area": connection_box_area(ic),
+            "apps": results,
+            "gen_pnr_seconds": time.perf_counter() - t0,
+        })
+    return recs
+
+
+def sweep_sb_topology(topologies: Sequence[SwitchBoxType] = (
+        SwitchBoxType.WILTON, SwitchBoxType.DISJOINT, SwitchBoxType.IMRAN),
+        apps: Optional[Dict[str, Callable]] = None,
+        num_tracks: int = 4, width: int = 8, height: int = 8,
+        sa_steps: int = 60, track_fc: float = 0.5) -> List[Dict]:
+    """§4.2.1 / Fig. 9: topology routability (Wilton routes, Disjoint
+    fails). track_fc < 1 reflects depopulated core-port track connections:
+    a route is then pinned to its starting track *class*, which Disjoint
+    can never leave (its fatal restriction) while Wilton re-permutes
+    tracks at every turn."""
+    apps = apps or BENCH_APPS
+    recs = []
+    for topo in topologies:
+        ic = create_uniform_interconnect(width=width, height=height,
+                                         num_tracks=num_tracks, io_ring=True,
+                                         sb_type=topo, reg_density=1.0,
+                                         cb_track_fc=track_fc,
+                                         sb_track_fc=track_fc)
+        results = _run_apps(ic, apps, sa_steps=sa_steps)
+        n_ok = sum(1 for r in results.values() if r["success"])
+        recs.append({
+            "topology": topo.value,
+            "sb_area": switch_box_area(ic),
+            "apps": results,
+            "n_routed": n_ok,
+            "n_apps": len(results),
+        })
+    return recs
+
+
+def sweep_port_connections(kind: str,
+                           sides: Sequence[int] = (4, 3, 2),
+                           apps: Optional[Dict[str, Callable]] = None,
+                           num_tracks: int = 5, width: int = 8,
+                           height: int = 8, sa_steps: int = 60
+                           ) -> List[Dict]:
+    """§4.2.2 / Figs. 12–15: depopulate SB (core-output) or CB (core-input)
+    side connections and measure area + runtime."""
+    if kind not in ("sb", "cb"):
+        raise ValueError("kind must be 'sb' or 'cb'")
+    apps = apps or BENCH_APPS
+    recs = []
+    for n_sides in sides:
+        kw = {"sb_sides": n_sides} if kind == "sb" else {"cb_sides": n_sides}
+        ic = create_uniform_interconnect(width=width, height=height,
+                                         num_tracks=num_tracks, io_ring=True,
+                                         sb_type=SwitchBoxType.WILTON,
+                                         reg_density=1.0, **kw)
+        results = _run_apps(ic, apps, sa_steps=sa_steps)
+        recs.append({
+            "kind": kind,
+            "sides": n_sides,
+            "sb_area": switch_box_area(ic),
+            "cb_area": connection_box_area(ic),
+            "apps": results,
+        })
+    return recs
+
+
+def generation_speed(sizes: Sequence[int] = (4, 8, 16, 32)) -> List[Dict]:
+    """Abstract claim: "fast design space exploration" — IR generation +
+    lowering speed vs array size."""
+    from .lowering import compile_interconnect
+    recs = []
+    for s in sizes:
+        t0 = time.perf_counter()
+        ic = create_uniform_interconnect(width=s, height=s, num_tracks=5,
+                                         reg_density=1.0)
+        t1 = time.perf_counter()
+        fab = compile_interconnect(ic)
+        t2 = time.perf_counter()
+        recs.append({"size": s, "nodes": fab.arrays.num_nodes,
+                     "gen_seconds": t1 - t0, "lower_seconds": t2 - t1})
+    return recs

@@ -1,0 +1,367 @@
+"""Static-interconnect hardware backend (Canal §3.3).
+
+Lowers the graph IR into a *functional JAX model* of the fabric instead of
+magma RTL. The paper's three lowering rules are applied mechanically:
+
+1. nodes with hardware attributes (cores) generate the specified hardware —
+   here, a vectorized functional model of the PE/MEM/IO cores;
+2. directed edges become wires — here, entries in a gather table;
+3. nodes with multiple incoming edges become multiplexers — here,
+   config-indexed selects into the gather table.
+
+Because the structural graph contains *potential* combinational cycles
+(register-bypass muxes), the fabric evaluates each cycle by fixpoint
+sweeps: one sweep propagates every node's value one combinational level.
+A legal configuration's active network is acyclic, so ``depth`` sweeps
+(≥ longest configured combinational path) reach the fixed point. The sweep
+itself is the perf hot spot and has a Pallas kernel
+(``repro.kernels.fabric_step``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .graph import (IO, Interconnect, Node, NodeKind, PortNode, Side)
+from .tiles import IOCore, MemCore, PECore, WORD
+
+PE_OP_IDS = {op: i for i, op in enumerate(PECore.OPS)}
+
+
+@dataclass
+class ConfigSlot:
+    node_id: int
+    fanin: int
+    num_bits: int
+    # bitstream address (tile-feature-register, see repro.core.bitstream)
+    x: int
+    y: int
+    feature: str
+    reg_index: int
+
+
+@dataclass
+class FabricArrays:
+    """Dense tables driving the sweep evaluation. All numpy on the host;
+    converted to jnp at jit boundaries."""
+
+    num_nodes: int
+    max_fanin: int
+    src: np.ndarray           # (N, F) int32, padded with N (zero sentinel)
+    fanin_count: np.ndarray   # (N,) int32
+    config_slot: np.ndarray   # (N,) int32, -1 when unconfigured
+    is_reg: np.ndarray        # (N,) bool
+    is_driven: np.ndarray     # (N,) bool: updated by sweeps
+    reg_ids: np.ndarray       # (R,) node ids of registers
+    reg_src: np.ndarray       # (R,) node id feeding each register
+    num_config: int
+
+
+class FabricModule:
+    """Functional model of the generated interconnect + cores.
+
+    ``step(state, ext_in, config, pe_cfg)`` advances one fabric clock cycle;
+    everything is jit/vmap friendly. Node values are int32 words masked to
+    the layer bit width.
+    """
+
+    def __init__(self, ic: Interconnect, use_pallas: bool = False):
+        self.ic = ic
+        self.use_pallas = use_pallas
+        self.nodes: List[Node] = list(ic.nodes())
+        self.node_id: Dict[Node, int] = {n: i for i, n in
+                                         enumerate(self.nodes)}
+        self.config_slots: List[ConfigSlot] = []
+        self._build_tables()
+        self._build_cores()
+
+    # ------------------------------------------------------------------ build
+    def _feature_of(self, node: Node) -> str:
+        if node.kind == NodeKind.PORT:
+            return f"CB_{node.port_name}"
+        return "SB"
+
+    def _build_tables(self) -> None:
+        n = len(self.nodes)
+        fanins = [len(node.fan_in) for node in self.nodes]
+        max_f = max(1, max(fanins, default=1))
+        src = np.full((n, max_f), n, dtype=np.int32)   # sentinel = n
+        fanin_count = np.zeros(n, dtype=np.int32)
+        config_slot = np.full(n, -1, dtype=np.int32)
+        is_reg = np.zeros(n, dtype=bool)
+        is_driven = np.zeros(n, dtype=bool)
+
+        # per-(tile, feature) register index counter for bitstream addressing
+        feat_counter: Dict[Tuple[int, int, str], int] = {}
+
+        for i, node in enumerate(self.nodes):
+            fi = len(node.fan_in)
+            fanin_count[i] = fi
+            for j, s in enumerate(node.fan_in):
+                src[i, j] = self.node_id[s]
+            if node.kind == NodeKind.REGISTER:
+                is_reg[i] = True
+                continue
+            if fi >= 1:
+                is_driven[i] = True
+            if fi > 1:
+                key = (node.x, node.y, self._feature_of(node))
+                idx = feat_counter.get(key, 0)
+                feat_counter[key] = idx + 1
+                config_slot[i] = len(self.config_slots)
+                self.config_slots.append(ConfigSlot(
+                    node_id=i, fanin=fi,
+                    num_bits=int(np.ceil(np.log2(fi))),
+                    x=node.x, y=node.y, feature=key[2], reg_index=idx))
+
+        reg_ids = np.array([i for i, node in enumerate(self.nodes)
+                            if node.kind == NodeKind.REGISTER],
+                           dtype=np.int32)
+        reg_src = np.array([src[i, 0] for i in reg_ids], dtype=np.int32)
+
+        self.arrays = FabricArrays(
+            num_nodes=n, max_fanin=max_f, src=src, fanin_count=fanin_count,
+            config_slot=config_slot, is_reg=is_reg, is_driven=is_driven,
+            reg_ids=reg_ids, reg_src=reg_src,
+            num_config=len(self.config_slots))
+        self.width_mask = np.array(
+            [(1 << node.width) - 1 for node in self.nodes] + [0],
+            dtype=np.int32)
+
+    def _build_cores(self) -> None:
+        """Vectorized core models: PEs and IOs (MEM modeled as delay reg)."""
+        pe_in: List[List[int]] = []     # (n_pe, 4) input port node ids
+        pe_out: List[List[int]] = []    # (n_pe, 2) output port node ids
+        self.pe_coords: List[Tuple[int, int]] = []
+        io_in_nodes: List[int] = []     # io_out ports (externally driven)
+        io_out_nodes: List[int] = []    # io_in ports (externally observed)
+        self.io_coords: List[Tuple[int, int]] = []
+        mem_in: List[int] = []
+        mem_out: List[int] = []
+
+        sentinel = self.arrays.num_nodes
+        seen = set()
+        for g in self.ic.graphs.values():
+            for (x, y), tile in sorted(g.tiles.items()):
+                if tile.core is None or (x, y) in seen:
+                    continue
+                seen.add((x, y))
+                core = tile.core
+                if isinstance(core, PECore):
+                    ins = [self.node_id[tile.get_port(f"data{i}")]
+                           for i in range(core.num_inputs)]
+                    ins += [sentinel] * (4 - len(ins))
+                    outs = [self.node_id[tile.get_port(f"res{i}")]
+                            for i in range(core.num_outputs)]
+                    pe_in.append(ins[:4])
+                    pe_out.append(outs)
+                    self.pe_coords.append((x, y))
+                elif isinstance(core, IOCore):
+                    io_in_nodes.append(self.node_id[tile.get_port("io_out")])
+                    io_out_nodes.append(self.node_id[tile.get_port("io_in")])
+                    self.io_coords.append((x, y))
+                elif isinstance(core, MemCore):
+                    mem_in.append(self.node_id[tile.get_port("wdata")])
+                    mem_out.append(self.node_id[tile.get_port("rdata")])
+
+        self.pe_in = np.array(pe_in, dtype=np.int32).reshape(-1, 4)
+        self.pe_out = (np.array(pe_out, dtype=np.int32)
+                       if pe_out else np.zeros((0, 2), np.int32))
+        self.io_in_nodes = np.array(io_in_nodes, dtype=np.int32)
+        self.io_out_nodes = np.array(io_out_nodes, dtype=np.int32)
+        self.mem_in = np.array(mem_in, dtype=np.int32)
+        self.mem_out = np.array(mem_out, dtype=np.int32)
+        self.num_pe = len(pe_in)
+        self.num_io = len(io_in_nodes)
+        self.num_mem = len(mem_in)
+
+    # -------------------------------------------------------------- interface
+    @property
+    def num_config(self) -> int:
+        return self.arrays.num_config
+
+    def init_state(self) -> Dict[str, jnp.ndarray]:
+        return {
+            "regs": jnp.zeros(len(self.arrays.reg_ids), dtype=jnp.int32),
+            "mem": jnp.zeros(max(self.num_mem, 1), dtype=jnp.int32),
+        }
+
+    def default_pe_cfg(self) -> Dict[str, jnp.ndarray]:
+        n = max(self.num_pe, 1)
+        return {
+            "op": jnp.full((n,), PE_OP_IDS["add"], dtype=jnp.int32),
+            "const": jnp.zeros((n,), dtype=jnp.int32),
+            # per-port packed-constant immediates (packing stage, §3.4)
+            "imm_mask": jnp.zeros((n, 4), dtype=jnp.int32),
+            "imm_val": jnp.zeros((n, 4), dtype=jnp.int32),
+        }
+
+    # ------------------------------------------------------------- evaluation
+    def _selects(self, config: jnp.ndarray) -> jnp.ndarray:
+        """Per-node mux select: config value clipped to fan-in, 0 default."""
+        a = self.arrays
+        slot = jnp.asarray(a.config_slot)
+        if a.num_config == 0:
+            return jnp.zeros(a.num_nodes, dtype=jnp.int32)
+        sel = jnp.where(slot >= 0,
+                        config[jnp.clip(slot, 0, a.num_config - 1)],
+                        0)
+        return jnp.clip(sel, 0, jnp.maximum(jnp.asarray(a.fanin_count) - 1,
+                                            0))
+
+    def _sweep(self, vals_ext: jnp.ndarray, sel: jnp.ndarray) -> jnp.ndarray:
+        """One combinational propagation sweep: the fabric hot loop.
+        vals_ext has the zero sentinel appended (length N+1); returns (N,).
+        """
+        a = self.arrays
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            new = kops.fabric_sweep(vals_ext, jnp.asarray(a.src), sel)
+        else:
+            src_sel = jnp.take_along_axis(
+                jnp.asarray(a.src), sel[:, None], axis=1)[:, 0]
+            new = vals_ext[src_sel]
+        keep = jnp.asarray(~a.is_driven)
+        return jnp.where(keep, vals_ext[:-1], new) \
+                  .astype(jnp.int32)
+
+    def _eval_pes(self, vals: jnp.ndarray,
+                  pe_cfg: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """vals is the (N,) vector; sentinel-padded PE inputs read 0 via the
+        extended gather below."""
+        if self.num_pe == 0:
+            return vals
+        vals_ext = jnp.concatenate([vals, jnp.zeros(1, jnp.int32)])
+        ins = vals_ext[jnp.asarray(self.pe_in)]      # (n_pe, 4)
+        if "imm_mask" in pe_cfg:
+            ins = jnp.where(pe_cfg["imm_mask"][:self.num_pe] > 0,
+                            pe_cfg["imm_val"][:self.num_pe], ins)
+        a, b, c = ins[:, 0], ins[:, 1], ins[:, 2]
+        op = pe_cfg["op"][:self.num_pe]
+        const = pe_cfg["const"][:self.num_pe]
+        shift_b = jnp.clip(b, 0, 15)
+        candidates = jnp.stack([
+            a + b, a - b, a * b, a & b, a | b, a ^ b,
+            a << shift_b, a >> shift_b, jnp.minimum(a, b),
+            jnp.maximum(a, b), jnp.abs(a - b),
+            jnp.where((a & 1) == 1, b, c), const, a,
+        ], axis=0)                                    # (n_ops, n_pe)
+        res0 = jnp.take_along_axis(candidates, op[None, :], axis=0)[0]
+        res0 = res0 & WORD
+        res1 = a & WORD                               # second output: pass-through
+        out_ids = jnp.asarray(self.pe_out)
+        vals = vals.at[out_ids[:, 0]].set(res0)
+        if self.pe_out.shape[1] > 1:
+            vals = vals.at[out_ids[:, 1]].set(res1)
+        return vals
+
+    def step(self, state: Dict[str, jnp.ndarray], ext_in: jnp.ndarray,
+             config: jnp.ndarray,
+             pe_cfg: Optional[Dict[str, jnp.ndarray]] = None,
+             depth: int = 16) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+        """One fabric clock cycle.
+
+        state: registers/mem. ext_in: (num_io,) values driven onto io_out
+        ports. config: (num_config,) mux selects. Returns (state', io_out
+        observations). ``depth`` = fixpoint sweeps (≥ longest configured
+        combinational chain).
+        """
+        if pe_cfg is None:
+            pe_cfg = self.default_pe_cfg()
+        a = self.arrays
+        sel = self._selects(config)
+        # value vector with zero sentinel at index N
+        vals = jnp.zeros(a.num_nodes, dtype=jnp.int32)
+        if len(a.reg_ids):
+            vals = vals.at[jnp.asarray(a.reg_ids)].set(state["regs"])
+        if self.num_io:
+            vals = vals.at[jnp.asarray(self.io_in_nodes)].set(
+                ext_in.astype(jnp.int32))
+        if self.num_mem:
+            vals = vals.at[jnp.asarray(self.mem_out)].set(
+                state["mem"][:self.num_mem])
+
+        def body(_, v):
+            v_ext = jnp.concatenate([v, jnp.zeros(1, jnp.int32)])
+            v = self._sweep(v_ext, sel)
+            # re-pin sources each sweep
+            if len(a.reg_ids):
+                v = v.at[jnp.asarray(a.reg_ids)].set(state["regs"])
+            if self.num_io:
+                v = v.at[jnp.asarray(self.io_in_nodes)].set(
+                    ext_in.astype(jnp.int32))
+            if self.num_mem:
+                v = v.at[jnp.asarray(self.mem_out)].set(
+                    state["mem"][:self.num_mem])
+            v = self._eval_pes(v, pe_cfg)
+            return v
+
+        vals = jax.lax.fori_loop(0, depth, body, vals)
+        vals_ext = jnp.concatenate([vals, jnp.zeros(1, jnp.int32)])
+        new_state = dict(state)
+        if len(a.reg_ids):
+            new_state["regs"] = vals_ext[jnp.asarray(a.reg_src)]
+        if self.num_mem:
+            new_state["mem"] = state["mem"].at[:self.num_mem].set(
+                vals_ext[jnp.asarray(self.mem_in)])
+        io_obs = (vals_ext[jnp.asarray(self.io_out_nodes)]
+                  if self.num_io else jnp.zeros(0, jnp.int32))
+        return new_state, io_obs
+
+    def run(self, config: jnp.ndarray, ext_stream: jnp.ndarray,
+            pe_cfg: Optional[Dict[str, jnp.ndarray]] = None,
+            depth: int = 16) -> jnp.ndarray:
+        """Run T cycles; ext_stream (T, num_io) -> observations (T, num_io)."""
+        state = self.init_state()
+
+        def scan_fn(st, x):
+            st, obs = self.step(st, x, config, pe_cfg, depth=depth)
+            return st, obs
+
+        _, out = jax.lax.scan(scan_fn, state, ext_stream)
+        return out
+
+    # ------------------------------------------------------- route → config
+    def route_to_config(self, edges: Sequence[Tuple[Node, Node]]
+                        ) -> np.ndarray:
+        """Translate routed IR edges into a config vector: for every edge
+        (src → dst) where dst is a mux, set dst's select to src's input
+        index. Conflicting assignments raise (illegal route)."""
+        config = np.zeros(self.num_config, dtype=np.int32)
+        assigned: Dict[int, int] = {}
+        for src, dst in edges:
+            i = self.node_id[dst]
+            slot = self.arrays.config_slot[i]
+            if slot < 0:
+                continue                    # single-input: hardwired
+            sel = dst.fan_in.index(src)
+            if i in assigned and assigned[i] != sel:
+                raise ValueError(
+                    f"conflicting mux assignment at {dst}: "
+                    f"{assigned[i]} vs {sel}")
+            assigned[i] = sel
+            config[slot] = sel
+        return config
+
+    def structural_connectivity(self) -> Dict[Tuple, List[Tuple]]:
+        """Connectivity as realized by the lowered tables — compared against
+        the IR by repro.core.verify (paper: parse generated RTL)."""
+        out: Dict[Tuple, List[Tuple]] = {}
+        a = self.arrays
+        for i, node in enumerate(self.nodes):
+            keys = []
+            for j in range(a.fanin_count[i]):
+                keys.append(self.nodes[a.src[i, j]].node_key())
+            out[node.node_key()] = keys
+        return out
+
+
+def compile_interconnect(ic: Interconnect,
+                         use_pallas: bool = False) -> FabricModule:
+    """The static-backend entry point (IR → hardware, §3.3)."""
+    return FabricModule(ic, use_pallas=use_pallas)

@@ -1,0 +1,304 @@
+"""Negotiated-congestion routing (§3.4): PathFinder-style iteration with A*.
+
+"During each iteration, we compute the slack on a net and determine how
+critical it is given global timing information. Then we route using the A*
+algorithm on the weighted graph. The weights for each edge are based on
+historical usage, net slack, and current congestion."
+
+The router works directly on the interconnect IR (Fig. 7): edge weights are
+the IR's embedded delays; congestion terms are negotiated over iterations;
+net criticality (delay / max delay of the previous iteration) blends the
+congestion cost with the pure-delay cost.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.graph import (Interconnect, Node, NodeKind)
+from .packing import PackedGraph
+
+
+class RoutingError(RuntimeError):
+    pass
+
+
+# Port-name normalization for instances whose kind changed during packing
+# (unpacked registers become pass-through PEs).
+_PORT_ALIAS = {"out": "res0", "in": "data0"}
+
+
+class RoutingResources:
+    """Array view of the IR for the router: ids, adjacency, costs."""
+
+    def __init__(self, ic: Interconnect, reg_penalty: float = 4.0):
+        self.ic = ic
+        self.nodes: List[Node] = list(ic.nodes())
+        self.node_id: Dict[Node, int] = {n: i for i, n in
+                                         enumerate(self.nodes)}
+        n = len(self.nodes)
+        adj: List[List[Tuple[int, float]]] = [[] for _ in range(n)]
+        min_hop = np.inf
+        for i, node in enumerate(self.nodes):
+            for dst in node.fan_out:
+                j = self.node_id[dst]
+                k = dst.fan_in.index(node)
+                d = dst.edge_delay_in[k] + dst.delay
+                adj[i].append((j, d))
+                if d > 0:
+                    min_hop = min(min_hop, d)
+        self.adj = adj
+        self.kind = np.array([int(nd.kind) for nd in self.nodes], np.int8)
+        self.xy = np.array([(nd.x, nd.y) for nd in self.nodes], np.int32)
+        # base node cost: intrinsic delay + epsilon, registers discouraged
+        # (keeps routed paths combinational unless pipelining is requested)
+        eps = 1e-3
+        self.base = np.array([
+            nd.delay + eps + (reg_penalty
+                              if nd.kind == NodeKind.REGISTER else 0.0)
+            for nd in self.nodes], np.float64)
+        self.hop_cost = float(min_hop if np.isfinite(min_hop) else 0.1)
+
+    def port(self, x: int, y: int, name: str, width: int) -> int:
+        g = self.ic.graph(width)
+        tile = g.get_tile(x, y)
+        if tile is None or name not in tile.ports:
+            raise RoutingError(f"no port {name} at tile ({x},{y})")
+        return self.node_id[tile.get_port(name)]
+
+
+@dataclass
+class RoutedNet:
+    name: str
+    src: int
+    sinks: List[int]
+    #: route tree as child -> parent node ids
+    tree: Dict[int, int] = field(default_factory=dict)
+    delay: float = 0.0
+
+    def nodes_used(self) -> Set[int]:
+        used = set(self.tree.keys()) | {self.src}
+        return used
+
+    def edges(self) -> List[Tuple[int, int]]:
+        return [(p, c) for c, p in self.tree.items()]
+
+
+@dataclass
+class RoutingResult:
+    nets: List[RoutedNet]
+    iterations: int
+    overuse_history: List[int]
+    resources: RoutingResources
+
+    def all_edges_nodes(self) -> List[Tuple[Node, Node]]:
+        out = []
+        for net in self.nets:
+            for p, c in net.edges():
+                out.append((self.resources.nodes[p],
+                            self.resources.nodes[c]))
+        return out
+
+    def total_wirelength(self) -> int:
+        return sum(len(net.tree) for net in self.nets)
+
+
+def _astar(res: RoutingResources, sources: Dict[int, float], sink: int,
+           cost_of: np.ndarray, crit: float, own_nodes: Set[int],
+           blocked: np.ndarray) -> Optional[List[int]]:
+    """A* from a set of sources (the net's current route tree) to one sink.
+    cost_of: per-node negotiated cost; crit blends congestion vs delay."""
+    tx, ty = res.xy[sink]
+    h_scale = res.hop_cost * 0.5     # admissible-ish under negotiation
+
+    def h(i: int) -> float:
+        x, y = res.xy[i]
+        return (abs(int(x) - int(tx)) + abs(int(y) - int(ty))) * h_scale
+
+    dist: Dict[int, float] = {}
+    came: Dict[int, int] = {}
+    pq: List[Tuple[float, float, int]] = []
+    for s, c0 in sources.items():
+        dist[s] = c0
+        heapq.heappush(pq, (c0 + h(s), c0, s))
+    while pq:
+        f, g, u = heapq.heappop(pq)
+        if u == sink:
+            path = [u]
+            while u in came:
+                u = came[u]
+                path.append(u)
+            path.reverse()
+            return path
+        if g > dist.get(u, np.inf):
+            continue
+        for v, d in res.adj[u]:
+            if v != sink:
+                if blocked[v] and v not in own_nodes:
+                    continue
+                # ports are endpoints, never pass-throughs
+                if res.kind[v] == int(NodeKind.PORT):
+                    continue
+            w = crit * (d + res.base[v]) + (1.0 - crit) * cost_of[v]
+            ng = g + w
+            if ng < dist.get(v, np.inf) - 1e-12:
+                dist[v] = ng
+                came[v] = u
+                heapq.heappush(pq, (ng + h(v), ng, v))
+    return None
+
+
+def route_nets(res: RoutingResources,
+               nets: List[Tuple[str, int, List[int]]],
+               max_iters: int = 40, pres_fac0: float = 0.6,
+               pres_growth: float = 1.5, hist_w: float = 0.4,
+               seed: int = 0,
+               node_capacity: Optional[np.ndarray] = None) -> RoutingResult:
+    """PathFinder negotiation over (name, src, sinks) nets.
+
+    node_capacity: per-node net capacity (default 1; >1 models virtual
+    channels, e.g. the pod-fabric ICI model)."""
+    n = len(res.nodes)
+    usage = np.zeros(n, np.int32)
+    hist = np.zeros(n, np.float64)
+    cap = (np.ones(n, np.int32) if node_capacity is None
+           else node_capacity.astype(np.int32))
+    routed: Dict[str, RoutedNet] = {}
+    crit: Dict[str, float] = {name: 0.0 for name, _, _ in nets}
+    overuse_hist: List[int] = []
+    # endpoints are exclusively owned: block them for every other net
+    endpoint_owner = np.full(n, -1, np.int32)
+    for k, (_, src, sinks) in enumerate(nets):
+        for e in [src] + sinks:
+            if endpoint_owner[e] not in (-1, k):
+                raise RoutingError("two nets share an endpoint node")
+            endpoint_owner[e] = k
+
+    pres_fac = pres_fac0
+    for it in range(max_iters):
+        over_pen = 1.0 + pres_fac * np.maximum(usage + 1 - cap, 0)
+        cost_of = res.base * (1.0 + hist_w * hist) * over_pen
+        to_route = [k for k, (name, _, _) in enumerate(nets)
+                    if it == 0 or _net_overused(routed.get(name), usage,
+                                                cap)]
+        if it > 0 and not to_route:
+            break
+        for k in to_route:
+            name, src, sinks = nets[k]
+            old = routed.pop(name, None)
+            if old is not None:
+                for nid in old.nodes_used():
+                    usage[nid] -= 1
+            over_pen = 1.0 + pres_fac * np.maximum(usage + 1 - cap, 0)
+            cost_of = res.base * (1.0 + hist_w * hist) * over_pen
+            blocked = (endpoint_owner >= 0) & (endpoint_owner != k)
+            net = RoutedNet(name, src, list(sinks))
+            tree_nodes: Dict[int, float] = {src: 0.0}
+            own: Set[int] = {src}
+            for sink in sorted(sinks,
+                               key=lambda s: -abs(res.xy[s][0] - res.xy[src][0])
+                               - abs(res.xy[s][1] - res.xy[src][1])):
+                path = _astar(res, tree_nodes, sink, cost_of,
+                              crit.get(name, 0.0), own, blocked)
+                if path is None:
+                    raise RoutingError(
+                        f"unroutable net {name} -> {res.nodes[sink]} "
+                        f"(iteration {it})")
+                for a, b in zip(path, path[1:]):
+                    if b not in net.tree:
+                        net.tree[b] = a
+                for nid in path:
+                    tree_nodes.setdefault(nid, 0.0)
+                    own.add(nid)
+            for nid in net.nodes_used():
+                usage[nid] += 1
+            routed[name] = net
+
+        over = int(np.sum(np.maximum(usage - cap, 0)))
+        overuse_hist.append(over)
+        if over == 0:
+            break
+        hist += np.maximum(usage - cap, 0)
+        pres_fac *= pres_growth
+        # update criticalities from current delays
+        delays = {}
+        for name, netr in routed.items():
+            netr.delay = _net_delay(res, netr)
+            delays[name] = netr.delay
+        dmax = max(delays.values()) if delays else 1.0
+        for name in delays:
+            crit[name] = min(0.9, delays[name] / max(dmax, 1e-9))
+    else:
+        over = int(np.sum(np.maximum(usage - cap, 0)))
+        if over:
+            raise RoutingError(
+                f"congestion not resolved after {max_iters} iterations "
+                f"({over} overused nodes)")
+
+    result_nets = []
+    for name, src, sinks in nets:
+        netr = routed[name]
+        netr.delay = _net_delay(res, netr)
+        result_nets.append(netr)
+    return RoutingResult(result_nets, len(overuse_hist), overuse_hist, res)
+
+
+def _net_overused(net: Optional[RoutedNet], usage: np.ndarray,
+                  cap: np.ndarray) -> bool:
+    if net is None:
+        return True
+    return any(usage[nid] > cap[nid] for nid in net.nodes_used())
+
+
+def _net_delay(res: RoutingResources, net: RoutedNet) -> float:
+    """Max source->sink delay along the route tree."""
+    memo: Dict[int, float] = {net.src: res.base[net.src]}
+
+    def delay_to(nid: int) -> float:
+        if nid in memo:
+            return memo[nid]
+        parent = net.tree[nid]
+        d = delay_to(parent) + res.nodes[nid].delay
+        k = res.nodes[nid].fan_in.index(res.nodes[parent])
+        d += res.nodes[nid].edge_delay_in[k]
+        memo[nid] = d
+        return d
+
+    return max((delay_to(s) for s in net.sinks), default=0.0)
+
+
+def route_app(ic: Interconnect, packed: PackedGraph,
+              placement: Dict[str, Tuple[int, int]],
+              width: int = 16, max_iters: int = 40,
+              res: Optional[RoutingResources] = None,
+              seed: int = 0) -> RoutingResult:
+    """Route a packed+placed application on the interconnect."""
+    if res is None:
+        res = RoutingResources(ic)
+    track_width = ic.widths[-1]
+
+    def port_of(inst_name: str, port: str) -> int:
+        inst = packed.placeable[inst_name]
+        x, y = placement[inst_name]
+        if inst.kind == "io_in":
+            pname = "io_out"
+        elif inst.kind == "io_out":
+            pname = "io_in"
+        else:
+            pname = _PORT_ALIAS.get(port, port)
+        return res.port(x, y, pname, track_width)
+
+    nets = []
+    for net in packed.nets:
+        if net.src[0] not in packed.placeable:
+            continue
+        src = port_of(net.src[0], net.src[1])
+        sinks = [port_of(s, p) for s, p in net.sinks
+                 if s in packed.placeable]
+        if not sinks:
+            continue
+        nets.append((net.name, src, sinks))
+    return route_nets(res, nets, max_iters=max_iters, seed=seed)

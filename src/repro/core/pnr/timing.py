@@ -1,0 +1,94 @@
+"""Static timing analysis over a routed application (§3.4, Fig. 7).
+
+The IR's edge weights carry wire/mux delays; cores carry intrinsic delays.
+Registers (and register-mode FIFOs) cut timing paths. The application's
+achievable clock period is the longest register-to-register (or IO-to-IO)
+combinational path: interconnect segments from the routed nets plus core
+traversal delays. Application *run time* = critical path × cycle count, the
+metric behind Figs. 11/14/15.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import NodeKind
+from .packing import PackedGraph
+from .route import RoutingResult, RoutingResources
+
+
+def _net_segment_delays(res: RoutingResources, tree: Dict[int, int],
+                        src: int, sinks: Sequence[int]
+                        ) -> Dict[int, Tuple[float, int]]:
+    """For each sink: (combinational delay of the longest register-free
+    suffix reaching it, number of registers crossed on its path)."""
+    out: Dict[int, Tuple[float, int]] = {}
+    for sink in sinks:
+        path = [sink]
+        node = sink
+        while node != src and node in tree:
+            node = tree[node]
+            path.append(node)
+        path.reverse()
+        d = res.nodes[path[0]].delay
+        regs = 0
+        for a, b in zip(path, path[1:]):
+            nb = res.nodes[b]
+            k = nb.fan_in.index(res.nodes[a])
+            if nb.kind == NodeKind.REGISTER:
+                regs += 1
+                d = 0.0                      # path cut
+            d += nb.delay + nb.edge_delay_in[k]
+        out[sink] = (d, regs)
+    return out
+
+
+def sta_critical_path(packed: PackedGraph, result: RoutingResult,
+                      placement: Dict[str, Tuple[int, int]],
+                      core_delay: float = 0.8,
+                      split_fifo_ctrl_delay: float = 0.0
+                      ) -> Dict[str, float]:
+    """Longest combinational path through routed nets + cores.
+
+    split_fifo_ctrl_delay models the paper's split-FIFO drawback: the FIFO
+    control signals are not registered at tile boundaries, so chained
+    control adds combinational delay proportional to registers crossed.
+
+    Returns {"critical_path_ns", "max_net_delay_ns", "total_wirelength"}.
+    """
+    res = result.resources
+    # arrival time at each instance output = max over input nets of
+    # (arrival at net source + net comb delay) + core delay; registers in
+    # the app (packed into PEs) cut paths. Iterate in topological-ish order
+    # with relaxation (app graphs are small).
+    inst_arrival: Dict[str, float] = {}
+    net_by_name = {n.name: n for n in result.nets}
+    app_nets = [n for n in packed.nets if n.name in net_by_name]
+
+    crit = 0.0
+    for _ in range(len(packed.placeable) + 2):
+        changed = False
+        for net in app_nets:
+            rnet = net_by_name[net.name]
+            src_arr = inst_arrival.get(net.src[0], 0.0)
+            seg = _net_segment_delays(res, rnet.tree, rnet.src, rnet.sinks)
+            for (sink_inst, _), sink_id in zip(net.sinks, rnet.sinks):
+                d, regs = seg[sink_id]
+                ctrl = regs * split_fifo_ctrl_delay
+                arr_in = (src_arr if regs == 0 else 0.0) + d + ctrl
+                crit = max(crit, arr_in)
+                kind = packed.placeable.get(sink_inst)
+                cd = core_delay if (kind and kind.kind == "pe") else 0.1
+                a = arr_in + cd
+                if a > inst_arrival.get(sink_inst, 0.0) + 1e-12:
+                    inst_arrival[sink_inst] = a
+                    changed = True
+        if not changed:
+            break
+    max_net = max((n.delay for n in result.nets), default=0.0)
+    return {
+        "critical_path_ns": max(crit, max_net),
+        "max_net_delay_ns": max_net,
+        "total_wirelength": float(result.total_wirelength()),
+    }

@@ -1,0 +1,2 @@
+from .simulator import AppEmulator  # noqa: F401
+from .ready_valid import RVFabric   # noqa: F401

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+- fabric_step: batched CGRA fabric sweep (the paper's generated hardware)
+- hpwl: per-net bounding-box reduction for SA placement
+- minplus: tropical relaxation for batched routing wavefronts
+- flash_attention: LM prefill attention
+- ssd_scan: Mamba-2 chunked state-space scan
+"""
+from . import ops, ref  # noqa: F401

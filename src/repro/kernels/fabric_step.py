@@ -1,0 +1,107 @@
+"""Pallas kernel: one fabric combinational sweep (the config-sweep /
+emulation hot spot of the generated interconnect).
+
+One sweep computes, for every IR node, the value of its selected mux input:
+
+    out[i] = vals[src[i, sel[i]]]
+
+TPU adaptation: the node-value vector lives wholly in VMEM (N ≤ ~64k nodes
+⇒ ≤ 256 KiB int32, well under the ~16 MiB VMEM budget), while the fan-in
+table is streamed block-by-block. The mux "select" is evaluated as a
+take-along-axis inside the block, and the gather out of the resident value
+vector is the only irregular access — exactly the structure a
+statically-configured CGRA sweep has. The batched variant vectorizes over
+configurations (bitstream-major layout) for the exhaustive connection
+sweep (§3.3).
+
+Validated in interpret mode against ``ref.fabric_sweep_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512          # nodes per block (multiple of 128 lanes x 4 sublanes)
+
+
+def _sweep_kernel(vals_ref, src_ref, sel_ref, out_ref):
+    """vals: (Npad,) resident; src: (BLOCK_N, F); sel: (BLOCK_N,)."""
+    src = src_ref[...]                        # (BN, F) int32
+    sel = sel_ref[...]                        # (BN,) int32
+    picked = jnp.take_along_axis(src, sel[:, None], axis=1)[:, 0]
+    out_ref[...] = jnp.take(vals_ref[...], picked, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fabric_sweep(vals_ext: jnp.ndarray, src: jnp.ndarray, sel: jnp.ndarray,
+                 interpret: bool = True) -> jnp.ndarray:
+    """One sweep. vals_ext: (N+1,) with zero sentinel at N; src: (N, F)
+    int32 (sentinel-padded); sel: (N,). Returns (N,)."""
+    n, f = src.shape
+    n_pad = pl.cdiv(n, BLOCK_N) * BLOCK_N
+    v_pad = pl.cdiv(vals_ext.shape[0], 128) * 128
+    vals_p = jnp.pad(vals_ext, (0, v_pad - vals_ext.shape[0]))
+    src_p = jnp.pad(src, ((0, n_pad - n), (0, 0)))
+    sel_p = jnp.pad(sel, (0, n_pad - n))
+    grid = (n_pad // BLOCK_N,)
+    out = pl.pallas_call(
+        _sweep_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_pad,), lambda i: (0,)),          # resident vals
+            pl.BlockSpec((BLOCK_N, f), lambda i: (i, 0)),    # streamed fan-in
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(vals_p, src_p, sel_p)
+    return out[:n]
+
+
+def _sweep_batch_kernel(vals_ref, src_ref, sel_ref, out_ref):
+    """vals: (BB, Npad); src: (BLOCK_N, F); sel: (BB, BLOCK_N)."""
+    src = src_ref[...]
+    bb = vals_ref.shape[0]
+
+    def body(b, _):
+        sel = sel_ref[b]
+        picked = jnp.take_along_axis(src, sel[:, None], axis=1)[:, 0]
+        out_ref[b, :] = jnp.take(vals_ref[b], picked, axis=0)
+        return 0
+
+    jax.lax.fori_loop(0, bb, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fabric_sweep_batch(vals_ext: jnp.ndarray, src: jnp.ndarray,
+                       sel: jnp.ndarray, interpret: bool = True
+                       ) -> jnp.ndarray:
+    """Batched sweep over configurations. vals_ext: (B, N+1); sel: (B, N);
+    src shared. Returns (B, N)."""
+    b = vals_ext.shape[0]
+    n, f = src.shape
+    bb = 8                                     # configs per block
+    b_pad = pl.cdiv(b, bb) * bb
+    n_pad = pl.cdiv(n, BLOCK_N) * BLOCK_N
+    v_pad = pl.cdiv(vals_ext.shape[1], 128) * 128
+    vals_p = jnp.pad(vals_ext, ((0, b_pad - b), (0, v_pad - vals_ext.shape[1])))
+    src_p = jnp.pad(src, ((0, n_pad - n), (0, 0)))
+    sel_p = jnp.pad(sel, ((0, b_pad - b), (0, n_pad - n)))
+    grid = (b_pad // bb, n_pad // BLOCK_N)
+    out = pl.pallas_call(
+        _sweep_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, v_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_N, f), lambda i, j: (j, 0)),
+            pl.BlockSpec((bb, BLOCK_N), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, n_pad), jnp.int32),
+        interpret=interpret,
+    )(vals_p, src_p, sel_p)
+    return out[:b, :n]

@@ -1,0 +1,106 @@
+"""Pallas kernel: flash attention (forward) for the LM substrate.
+
+Streaming-softmax attention with VMEM-tiled Q/K/V blocks — the standard
+TPU adaptation of FlashAttention: the (S x S) score matrix never
+materializes in HBM; each Q block loops over KV blocks keeping running
+max/denominator. MXU-aligned block sizes (128). Supports causal masking
+and GQA (KV-head broadcast is resolved by the wrapper in ops.py).
+
+Validated in interpret mode against ``ref.attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float,
+                  causal: bool, block_k: int, kv_pad: int, kv_actual: int):
+    """q: (1, BQ, D); k/v: (1, S_kv_pad, D) resident; o: (1, BQ, D)."""
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale            # (BQ, D)
+    bq, d = q.shape
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+
+    n_kv = kv_pad // block_k
+    if causal:
+        # only KV blocks whose first key position <= this Q block's last
+        # query position can contribute
+        last_q = (qi + 1) * bq - 1
+        n_kv_eff = jnp.minimum(n_kv, last_q // block_k + 1)
+    else:
+        n_kv_eff = n_kv
+
+    def body(kj, carry):
+        m_c, l_c, acc_c = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(
+            k_ref[0], kj * block_k, block_k, axis=0).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice_in_dim(
+            v_ref[0], kj * block_k, block_k, axis=0).astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T,
+                    preferred_element_type=jnp.float32)  # (BQ, BK)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_k), 1)
+        mask = k_pos < kv_actual                         # padding mask
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 0)
+            mask = mask & (q_pos >= k_pos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_c, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_c - m_new)
+        l_new = l_c * alpha + jnp.sum(p, axis=1)
+        acc_new = acc_c * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv_eff, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "interpret", "block_k"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, interpret: bool = True,
+                    block_k: int = BLOCK_K) -> jnp.ndarray:
+    """q: (BH, Sq, D); k/v: (BH, Skv, D). Returns (BH, Sq, D).
+
+    Head/batch dims must be pre-flattened (ops.py handles GQA broadcast).
+    """
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    scale = 1.0 / (d ** 0.5)
+    block_k = min(block_k, max(128, 1))
+    sq_pad = pl.cdiv(sq, BLOCK_Q) * BLOCK_Q
+    skv_pad = pl.cdiv(skv, block_k) * block_k
+    q_p = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0)))
+
+    grid = (bh, sq_pad // BLOCK_Q)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               block_k=block_k, kv_pad=skv_pad,
+                               kv_actual=skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, skv_pad, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, skv_pad, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_pad, d), q.dtype),
+        interpret=interpret,
+    )(q_p, k_p, v_p)
+    return out[:, :sq, :]

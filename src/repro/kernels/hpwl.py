@@ -1,0 +1,75 @@
+"""Pallas kernel: per-net half-perimeter wirelength (HPWL).
+
+The detailed-placement annealer (§3.4, Eq. 2) evaluates batches of
+candidate moves; each evaluation reduces every net's pin bounding box. In
+dense form the net pins are padded to (n_nets, K, 2) with +/- sentinel
+coordinates, and the kernel is a pure VPU reduction, tiled over nets —
+the ideal TPU shape for this workload (no scatter, no host sync).
+
+Validated in interpret mode against ``ref.hpwl_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_NETS = 256
+SENTINEL = 1 << 20
+
+
+def _hpwl_kernel(pins_ref, mask_ref, out_ref):
+    """pins: (BN, K, 2) int32; mask: (BN, K) int32; out: (BN,) int32."""
+    pins = pins_ref[...]
+    mask = mask_ref[...] > 0
+    big = jnp.int32(SENTINEL)
+    x = pins[:, :, 0]
+    y = pins[:, :, 1]
+    xmax = jnp.max(jnp.where(mask, x, -big), axis=1)
+    xmin = jnp.min(jnp.where(mask, x, big), axis=1)
+    ymax = jnp.max(jnp.where(mask, y, -big), axis=1)
+    ymin = jnp.min(jnp.where(mask, y, big), axis=1)
+    any_pin = jnp.any(mask, axis=1)
+    out_ref[...] = jnp.where(any_pin,
+                             (xmax - xmin) + (ymax - ymin), 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hpwl(pins: jnp.ndarray, mask: jnp.ndarray,
+         interpret: bool = True) -> jnp.ndarray:
+    """pins: (n_nets, K, 2) int32 padded pin coords; mask: (n_nets, K).
+    Returns per-net HPWL (n_nets,) int32."""
+    n, k, _ = pins.shape
+    n_pad = pl.cdiv(n, BLOCK_NETS) * BLOCK_NETS
+    pins_p = jnp.pad(pins, ((0, n_pad - n), (0, 0), (0, 0)))
+    mask_p = jnp.pad(mask.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
+    out = pl.pallas_call(
+        _hpwl_kernel,
+        grid=(n_pad // BLOCK_NETS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_NETS, k, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLOCK_NETS, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_NETS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(pins_p, mask_p)
+    return out[:n]
+
+
+def pack_nets(pin_net, pin_xy, n_nets: int, k_max: int):
+    """Host-side helper: (pin_net, pin_xy) lists -> dense (n_nets, K, 2)."""
+    import numpy as np
+    pins = np.zeros((n_nets, k_max, 2), np.int32)
+    mask = np.zeros((n_nets, k_max), np.int32)
+    fill = np.zeros(n_nets, np.int32)
+    for net, (x, y) in zip(pin_net, pin_xy):
+        j = fill[net]
+        if j >= k_max:
+            raise ValueError(f"net {net} exceeds K={k_max} pins")
+        pins[net, j] = (x, y)
+        mask[net, j] = 1
+        fill[net] += 1
+    return pins, mask

@@ -1,0 +1,84 @@
+"""Pallas kernel: blocked min-plus (tropical) relaxation for routing
+wavefronts.
+
+Hardware adaptation (DESIGN.md §2): per-net A* is pointer-chasing and has
+no TPU analogue, so the wavefront-cost computation is reformulated as
+iterated tropical matrix-vector products over the (tile-level) routing
+graph:
+
+    d'[b, j] = min(d[b, j], min_i (d[b, i] + w[i, j]))
+
+for a *batch* of nets b at once. ``w`` is the dense inf-padded adjacency
+of the coarse routing graph (tiles, not IR nodes: N = W*H <= 4096, so the
+dense tile fits VMEM in 128x128 blocks). Iterating to fixpoint yields all
+shortest path costs (Bellman-Ford over the tropical semiring); the
+PathFinder outer loop then uses these costs as its A* lower bounds /
+batched wavefronts.
+
+Validated in interpret mode against ``ref.minplus_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+INF = jnp.float32(3.0e38) / 4
+
+
+def _minplus_kernel(d_ref, w_ref, out_ref):
+    """d: (B, BLOCK_i) costs; w: (BLOCK_i, BLOCK_j); out: (B, BLOCK_j).
+
+    Accumulates the running minimum across the i-grid dimension.
+    """
+    i = pl.program_id(1)
+    d = d_ref[...]                              # (B, bi)
+    w = w_ref[...]                              # (bi, bj)
+    cand = jnp.min(d[:, :, None] + w[None, :, :], axis=1)   # (B, bj)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = cand
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] = jnp.minimum(out_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minplus_step(d: jnp.ndarray, w: jnp.ndarray,
+                 interpret: bool = True) -> jnp.ndarray:
+    """One relaxation: returns min(d, d ⊗ w) for batched cost vectors.
+
+    d: (B, N) float32; w: (N, N) float32 inf-padded adjacency (w[i,i]=0).
+    """
+    b, n = d.shape
+    n_pad = pl.cdiv(n, BLOCK) * BLOCK
+    d_p = jnp.pad(d, ((0, 0), (0, n_pad - n)), constant_values=INF)
+    w_p = jnp.pad(w, ((0, n_pad - n), (0, n_pad - n)), constant_values=INF)
+    grid = (n_pad // BLOCK, n_pad // BLOCK)     # (j, i): i inner accumulates
+    out = pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, BLOCK), lambda j, i: (0, i)),
+            pl.BlockSpec((BLOCK, BLOCK), lambda j, i: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((b, BLOCK), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad), jnp.float32),
+        interpret=interpret,
+    )(d_p, w_p)
+    return jnp.minimum(d, out[:, :n])
+
+
+def minplus_fixpoint(d0: jnp.ndarray, w: jnp.ndarray, iters: int,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Iterate to (bounded) fixpoint: all-sources shortest path costs."""
+
+    def body(_, d):
+        return minplus_step(d, w, interpret=interpret)
+
+    return jax.lax.fori_loop(0, iters, body, d0)

@@ -1,0 +1,71 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode; on TPU the same
+``pallas_call`` lowers to Mosaic. ``interpret`` is resolved once per
+process from the backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import fabric_step as _fabric
+from . import flash_attention as _flash
+from . import hpwl as _hpwl
+from . import minplus as _minplus
+from . import ssd_scan as _ssd
+
+
+@functools.lru_cache(maxsize=1)
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def fabric_sweep(vals_ext: jnp.ndarray, src: jnp.ndarray,
+                 sel: jnp.ndarray) -> jnp.ndarray:
+    return _fabric.fabric_sweep(vals_ext, src, sel, interpret=_interpret())
+
+
+def fabric_sweep_batch(vals_ext: jnp.ndarray, src: jnp.ndarray,
+                       sel: jnp.ndarray) -> jnp.ndarray:
+    return _fabric.fabric_sweep_batch(vals_ext, src, sel,
+                                      interpret=_interpret())
+
+
+def hpwl(pins: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    return _hpwl.hpwl(pins, mask, interpret=_interpret())
+
+
+def minplus_step(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return _minplus.minplus_step(d, w, interpret=_interpret())
+
+
+def minplus_fixpoint(d0: jnp.ndarray, w: jnp.ndarray,
+                     iters: int) -> jnp.ndarray:
+    return _minplus.minplus_fixpoint(d0, w, iters, interpret=_interpret())
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True) -> jnp.ndarray:
+    """GQA-aware wrapper. q: (B, Hq, S, D); k/v: (B, Hkv, S, D)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hq, -1, d)
+    vf = v.reshape(b * hq, -1, d)
+    out = _flash.flash_attention(qf, kf, vf, causal=causal,
+                                 interpret=_interpret())
+    return out.reshape(b, hq, sq, d)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, chunk: int = 128
+             ) -> jnp.ndarray:
+    return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk,
+                         interpret=_interpret())

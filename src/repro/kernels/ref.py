@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fabric_sweep_ref(vals_ext: jnp.ndarray, src: jnp.ndarray,
+                     sel: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = vals[src[i, sel[i]]]."""
+    picked = jnp.take_along_axis(src, sel[:, None], axis=1)[:, 0]
+    return vals_ext[picked]
+
+
+def fabric_sweep_batch_ref(vals_ext: jnp.ndarray, src: jnp.ndarray,
+                           sel: jnp.ndarray) -> jnp.ndarray:
+    return jax.vmap(lambda v, s: fabric_sweep_ref(v, src, s))(vals_ext, sel)
+
+
+def hpwl_ref(pins: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    big = jnp.int32(1 << 20)
+    m = mask > 0
+    x, y = pins[:, :, 0], pins[:, :, 1]
+    xmax = jnp.max(jnp.where(m, x, -big), axis=1)
+    xmin = jnp.min(jnp.where(m, x, big), axis=1)
+    ymax = jnp.max(jnp.where(m, y, -big), axis=1)
+    ymin = jnp.min(jnp.where(m, y, big), axis=1)
+    return jnp.where(m.any(axis=1), (xmax - xmin) + (ymax - ymin), 0)
+
+
+def minplus_ref(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """min(d, min_i(d_i + w_ij)) batched over rows of d."""
+    return jnp.minimum(d, jnp.min(d[:, :, None] + w[None], axis=1))
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Naive softmax attention. q: (BH, Sq, D), k/v: (BH, Skv, D)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, skv = s.shape[-2], s.shape[-1]
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(qi >= ki, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+            b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Naive SSD recurrence (the semantics the chunked kernel must match).
+
+    h_t = exp(dt_t a) h_{t-1} + dt_t x_t B_t^T ;  y_t = h_t C_t
+    x: (BH, L, P), dt: (BH, L), a: (BH,), b/c: (BH, L, N) -> y (BH, L, P)
+    """
+
+    def one(xh, dth, ah, bh_, ch):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(dtt * ah) * h + dtt * jnp.outer(xt, bt)
+            return h, h @ ct
+
+        p, n = xh.shape[-1], bh_.shape[-1]
+        h0 = jnp.zeros((p, n), jnp.float32)
+        _, y = jax.lax.scan(step, h0,
+                            (xh.astype(jnp.float32),
+                             dth.astype(jnp.float32),
+                             bh_.astype(jnp.float32),
+                             ch.astype(jnp.float32)))
+        return y
+
+    return jax.vmap(one)(x, dt, a, b, c).astype(x.dtype)

@@ -1,0 +1,116 @@
+"""Pallas kernel: Mamba-2 SSD (state-space duality) chunked scan.
+
+The SSD recurrence per head (scalar A decay, state (P, N)):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t ⊗ B_t
+    y_t = C_t · h_t
+
+TPU adaptation (the paper-family chunked algorithm): the sequence is
+split into chunks of length C. Within a chunk the quadratic "attention
+form" computes intra-chunk contributions on the MXU; a small carried
+state (P x N) propagates across chunks through the sequential grid
+dimension — Pallas guarantees sequential execution of the last grid axis,
+so the state lives in a VMEM scratch accumulator.
+
+Validated in interpret mode against ``ref.ssd_ref`` (naive recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h_scr):
+    """Blocks (one head, one chunk):
+    x: (1, C, P); dt: (1, C); b/c: (1, C, N); a: (1,); y: (1, C, P)
+    h_scr: (P, N) carried VMEM scratch (sequential chunk axis).
+    """
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)         # (C, P)
+    dt = dt_ref[0].astype(jnp.float32)       # (C,)
+    b = b_ref[0].astype(jnp.float32)         # (C, N)
+    c = c_ref[0].astype(jnp.float32)         # (C, N)
+    a = a_ref[0].astype(jnp.float32)         # scalar
+
+    # cumulative log-decay within the chunk: seg[t] = sum_{u<=t} dt_u * a
+    da = dt * a                              # (C,) (a < 0)
+    seg = jnp.cumsum(da)                     # (C,)
+    # decay from chunk start to position t (inclusive of t's own decay)
+    decay_in = jnp.exp(seg)                  # (C,)
+
+    # inter-chunk: contribution of carried state h0
+    #   y_t += C_t · (exp(seg_t) * h0)
+    h0 = h_scr[...]                          # (P, N)
+    y_inter = (c @ h0.T) * decay_in[:, None]                  # (C, P)
+
+    # intra-chunk (attention form):
+    #   y_t += sum_{u<=t} exp(seg_t - seg_u) * (C_t·B_u) * dt_u * x_u
+    scores = c @ b.T                                           # (C, C) t,u
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    l_mat = jnp.exp(seg[:, None] - seg[None, :])
+    l_mat = jnp.where(t_idx >= u_idx, l_mat, 0.0)
+    w = scores * l_mat * dt[None, :]                           # (C, C)
+    y_intra = w @ x                                            # (C, P)
+
+    y_ref[0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # carry state to next chunk:
+    #   h_C = exp(seg_last) * h0 + sum_u exp(seg_last - seg_u) dt_u x_u⊗B_u
+    seg_last = seg[-1]
+    decay_tail = jnp.exp(seg_last - seg)                       # (C,)
+    xb = (x * (dt * decay_tail)[:, None]).T @ b                # (P, N)
+    h_scr[...] = jnp.exp(seg_last) * h0 + xb
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, chunk: int = 128,
+             interpret: bool = True) -> jnp.ndarray:
+    """SSD forward.
+
+    x: (BH, L, P) inputs per flattened batch*head
+    dt: (BH, L) positive step sizes
+    a: (BH,) negative scalar decay per head
+    b, c: (BH, L, N) input/output projections (already head-grouped)
+    Returns y: (BH, L, P).
+    """
+    bh, l, p = x.shape
+    n = b.shape[-1]
+    if l % chunk != 0:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    lp = x.shape[1]
+    grid = (bh, lp // chunk)                    # chunk axis sequential
+    out = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk), lambda h, i: (h, i)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1,), lambda h, i: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, lp, p), x.dtype),
+        scratch_shapes=[pltpu_scratch(p, n)],
+        interpret=interpret,
+    )(x, dt, b, c, a)
+    return out[:, :l, :]
+
+
+def pltpu_scratch(p: int, n: int):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM((p, n), jnp.float32)

@@ -1,0 +1,364 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  with mesh:
+      lowered = jax.jit(step, in_shardings=..., out_shardings=...) \
+          .lower(**input_specs(arch))
+      compiled = lowered.compile()
+      print(compiled.memory_analysis())   # proves it fits
+      print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+plus collective-byte parsing from the partitioned HLO. Results land in
+``experiments/dryrun/<mesh>/<arch>/<shape>.json`` for the roofline table.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+(--all iterates the full assigned matrix, one subprocess per cell for
+memory isolation.)
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, cell_is_runnable, get_config,
+                           input_specs, list_archs)
+from repro.launch.mesh import batch_spec, make_production_mesh, \
+    tree_shardings
+from repro.models import build_model
+from repro.optim import adamw, adafactor, cosine_schedule
+from repro.roofline.analysis import (active_params, count_params,
+                                     model_flops, roofline_terms)
+from repro.roofline.hlo_parse import link_traffic_bytes, parse_collectives
+from repro.train.step import (init_train_state, make_train_step,
+                              train_state_specs)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def prune_specs(spec_tree, abstract_tree, mesh):
+    """Drop sharding on dims the shape can't divide (batch=1 decode cells,
+    odd head counts): pjit arg shardings require divisibility."""
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def prune(spec, ab):
+        if not isinstance(spec, P):
+            return spec
+        shape = ab.shape
+        new = []
+        for i, axes in enumerate(spec):
+            if axes is None or i >= len(shape):
+                new.append(None if i >= len(shape) else axes)
+                continue
+            ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+            n = 1
+            for a in ax_tuple:
+                n *= axis_size[a]
+            new.append(axes if shape[i] % n == 0 else None)
+        return P(*new)
+
+    return jax.tree.map(prune, spec_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def pick_optimizer(cfg):
+    """Adafactor for the 1T cell (memory: DESIGN.md), AdamW elsewhere."""
+    sched = cosine_schedule(3e-4, 100, 10_000)
+    if cfg.moe is not None and cfg.moe.num_experts >= 256:
+        return adafactor(sched)
+    return adamw(sched)
+
+
+def microbatches_for(cfg, shape) -> int:
+    """Grad-accum so one microbatch of activations fits 16 GiB/chip."""
+    if shape.kind != "train":
+        return 0
+    tokens = shape.global_batch * shape.seq_len
+    # heuristic: big models need more accumulation
+    if cfg.d_model >= 7168:
+        mb = 8
+    elif cfg.d_model >= 5120:
+        mb = 4
+    else:
+        mb = 2 if tokens >= 2**20 else 0
+    if cfg.moe is not None and cfg.moe.num_experts:
+        mb = max(mb, 4)               # dispatch buffers scale with tokens
+    return mb
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               attn_impl: Optional[str] = None,
+               remat: Optional[str] = None,
+               extra_tags: Optional[Dict] = None,
+               cfg_overrides: Optional[Dict] = None):
+    """Returns (lowered, meta) for one cell."""
+    cfg = get_config(arch)
+    if attn_impl:
+        cfg = cfg.replace(attn_impl=attn_impl)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    # full remat is the safe memory default for the 1M-token train cells;
+    # lighter policies are hillclimb knobs (--remat)
+    cfg = cfg.replace(remat=remat or
+                      ("full" if shape.kind == "train" else "none"))
+    if "pod" in mesh.axis_names:
+        cfg = cfg.replace(batch_axes=("pod", "data"))
+    if not cell_is_runnable(cfg, shape):
+        raise ValueError(f"{arch} x {shape_name} skipped "
+                         f"(full attention at 512k: DESIGN.md)")
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    bspec = batch_spec(mesh)
+    batch_specs = prune_specs({k: bspec for k in specs}, specs, mesh)
+    batch_sh = tree_shardings(mesh, batch_specs)
+
+    abstract_params = jax.eval_shape(model.init_params,
+                                     jax.random.PRNGKey(0))
+    n_params = count_params(abstract_params)
+    n_active = active_params(cfg, n_params)
+    param_specs = prune_specs(model.param_specs(), abstract_params, mesh)
+    param_sh = tree_shardings(mesh, param_specs)
+
+    if shape.kind == "train":
+        opt = pick_optimizer(cfg)
+        mb = microbatches_for(cfg, shape)
+        step_fn = make_train_step(model, opt, microbatches=mb)
+        abstract_state = jax.eval_shape(
+            lambda rng: init_train_state(model, opt, rng),
+            jax.random.PRNGKey(0))
+        state_specs = prune_specs(train_state_specs(model, opt),
+                                  abstract_state, mesh)
+        state_sh = tree_shardings(mesh, state_specs)
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "accuracy": NamedSharding(mesh, P())}
+        jitted = jax.jit(step_fn,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, metrics_sh),
+                         donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(abstract_state, specs)
+        tokens = shape.global_batch * shape.seq_len
+        mflops = model_flops(n_active, tokens, "train")
+    else:
+        cache_len = shape.seq_len
+        if cfg.vlm is not None:        # vision prefix occupies cache slots
+            cache_len += cfg.vlm.num_patches
+        abstract_cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, cache_len))
+        cache_specs = prune_specs(model.cache_specs(), abstract_cache,
+                                  mesh)
+        cache_sh = tree_shardings(mesh, cache_specs)
+        logits_sh = NamedSharding(
+            mesh, bspec if shape.global_batch % 16 == 0 else P())
+
+        if shape.kind == "prefill":
+            def serve_fn(params, cache, batch):
+                return model.prefill(params, cache, batch)
+            tokens = shape.global_batch * shape.seq_len
+        else:
+            def serve_fn(params, cache, batch):
+                return model.decode_step(params, cache, batch)
+            tokens = shape.global_batch          # one new token each
+
+        jitted = jax.jit(serve_fn,
+                         in_shardings=(param_sh, cache_sh, batch_sh),
+                         out_shardings=(logits_sh, cache_sh),
+                         donate_argnums=(1,))
+        with mesh:
+            lowered = jitted.lower(abstract_params, abstract_cache, specs)
+        mflops = model_flops(n_active, tokens, "serve")
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "kind": shape.kind,
+        "n_params": n_params, "n_params_active": n_active,
+        "tokens": tokens, "model_flops": mflops,
+        "mesh_axes": dict(zip(mesh.axis_names,
+                              mesh.devices.shape)),
+        "n_devices": int(mesh.devices.size),
+    }
+    if extra_tags:
+        meta.update(extra_tags)
+    return lowered, meta
+
+
+def analyze(lowered, meta: Dict, verbose: bool = True) -> Dict:
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:                                # pragma: no cover
+        mem["error"] = str(e)
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and
+                k in ("flops", "bytes accessed", "transcendentals",
+                      "utilization operand 0 {}", "optimal_seconds")}
+    except Exception as e:                                # pragma: no cover
+        cost["error"] = str(e)
+
+    # loop-aware HLO cost model (XLA cost_analysis counts scan bodies once)
+    from repro.roofline.hlo_cost import HloCostModel
+    hlo = compiled.as_text()
+    t0 = time.perf_counter()
+    totals = HloCostModel(hlo).totals()
+    parse_s = time.perf_counter() - t0
+
+    n_dev = meta["n_devices"]
+    flops_dev = totals["flops"]
+    bytes_dev = totals["bytes"]
+    link_bytes = totals["link_bytes"]
+    terms = roofline_terms(flops_dev, bytes_dev, link_bytes)
+    useful = meta["model_flops"] / max(flops_dev * n_dev, 1e-30)
+
+    rec = dict(meta)
+    rec.update({
+        "compile_seconds": compile_s,
+        "hlo_parse_seconds": parse_s,
+        "memory_analysis": mem,
+        "cost_analysis_raw": cost,     # XLA's (loop-uncorrected) numbers
+        "per_device_flops": flops_dev,
+        "per_device_hbm_bytes": bytes_dev,
+        "per_chip_link_bytes": link_bytes,
+        "collectives": {
+            "count": totals["n_collective_ops"],
+            "by_kind_traffic": totals["collectives_by_kind"],
+        },
+        "roofline": terms,
+        "useful_flops_ratio": useful,
+    })
+    if verbose:
+        print(f"  compiled in {compile_s:.1f}s; "
+              f"mem(args={mem.get('argument_size_in_bytes', 0) / 2**30:.2f}"
+              f"GiB temp={mem.get('temp_size_in_bytes', 0) / 2**30:.2f}GiB)"
+              f"/dev")
+        print(f"  flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+              f"link_bytes/chip={link_bytes:.3e}")
+        print(f"  roofline: compute={terms['compute_s']:.4f}s "
+              f"memory={terms['memory_s']:.4f}s "
+              f"collective={terms['collective_s']:.4f}s "
+              f"-> {terms['dominant']} bound, "
+              f"fraction={terms['roofline_fraction']:.2f}, "
+              f"useful_flops={useful:.2f}")
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = OUT_DIR, **build_kw) -> Dict:
+    from repro.configs import canonical
+    arch = canonical(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    print(f"[dryrun] {arch} x {shape_name} on {mesh_kind} "
+          f"({mesh.devices.size} chips)", flush=True)
+    lowered, meta = build_cell(arch, shape_name, mesh, **build_kw)
+    meta["mesh"] = mesh_kind
+    rec = analyze(lowered, meta)
+    path = os.path.join(out_dir, mesh_kind, arch)
+    os.makedirs(path, exist_ok=True)
+    tag = rec.get("tag", "")
+    fname = f"{shape_name}{('_' + tag) if tag else ''}.json"
+    with open(os.path.join(path, fname), "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def iter_cells(mesh_kinds):
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            if not cell_is_runnable(cfg, shape):
+                continue
+            for mk in mesh_kinds:
+                yield arch, shape_name, mk
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--shape", type=str, choices=list(SHAPES))
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true",
+                    help="run the full assigned matrix in subprocesses")
+    ap.add_argument("--attn-impl", type=str, default=None)
+    ap.add_argument("--remat", type=str, default=None)
+    ap.add_argument("--tag", type=str, default=None,
+                    help="suffix for the result file (perf experiments)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (perf experiments), "
+                         "e.g. --override attn_scores_f32=false")
+    ap.add_argument("--out", type=str, default=OUT_DIR)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            v = v.lower() == "true"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    mesh_kinds = (("single", "multi") if args.mesh == "both"
+                  else (args.mesh,))
+
+    if args.all:
+        failures = []
+        for arch, shape_name, mk in iter_cells(mesh_kinds):
+            res_path = os.path.join(args.out, mk, arch,
+                                    f"{shape_name}.json")
+            if os.path.exists(res_path):
+                print(f"[skip] {arch} x {shape_name} x {mk} (done)")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape_name, "--mesh", mk,
+                   "--out", args.out]
+            r = subprocess.run(cmd, cwd=os.getcwd())
+            if r.returncode != 0:
+                failures.append((arch, shape_name, mk))
+        if failures:
+            sys.exit(f"dry-run failures: {failures}")
+        print("[dryrun] full matrix complete")
+        return
+
+    extra = {}
+    if args.tag:
+        extra = {"extra_tags": {"tag": args.tag}}
+    build_kw = dict(attn_impl=args.attn_impl, remat=args.remat,
+                    cfg_overrides=overrides or None, **extra)
+    run_cell(args.arch, args.shape, mesh_kinds[0], out_dir=args.out,
+             **build_kw)
+
+
+if __name__ == "__main__":
+    main()

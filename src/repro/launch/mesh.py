@@ -1,0 +1,53 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+pure data parallelism over the (slower) inter-pod links, which is why
+gradient compression targets it (runtime/compression.py).
+
+Functions, not module constants: importing this module never touches JAX
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = max(1, n // model_axis)
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def batch_spec(mesh: Mesh) -> PartitionSpec:
+    """Batch dim sharded over every data-parallel axis present."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return PartitionSpec(tuple(axes) if len(axes) > 1 else axes[0])
+
+
+def logical_to_physical(mesh: Mesh, spec: PartitionSpec) -> PartitionSpec:
+    """Map canonical ('data'/'model') specs onto this mesh: on the
+    multi-pod mesh, parameters stay sharded only over (data, model) —
+    the pod axis replicates them (pure DP)."""
+    return spec
+
+
+def sharding(mesh: Mesh, spec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))

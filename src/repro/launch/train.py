@@ -1,0 +1,90 @@
+"""Production training launcher.
+
+On real hardware this runs under multi-process JAX (one process per host;
+jax.distributed.initialize from the cluster env) against the production
+mesh; in this container it runs smoke-scale configs on the host mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-compression", type=str, default=None,
+                    choices=(None, "int8_ef"))
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.ckpt import CheckpointManager
+    from repro.configs import get_config, get_smoke
+    from repro.data import SyntheticTokens
+    from repro.launch.mesh import make_host_mesh, tree_shardings
+    from repro.models import build_model
+    from repro.optim import adamw, cosine_schedule
+    from repro.runtime import StragglerMonitor, Supervisor
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(ce_seq_chunk=min(args.seq, 512), moe_groups=2)
+    model = build_model(cfg)
+    opt = adamw(cosine_schedule(3e-3 if args.smoke else 3e-4, 20,
+                                args.steps))
+
+    mesh = make_host_mesh()
+    with mesh:
+        state = init_train_state(model, opt, jax.random.PRNGKey(0))
+        step_fn = jax.jit(make_train_step(
+            model, opt, microbatches=args.microbatches,
+            grad_compression=args.grad_compression))
+
+        ds = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                             global_batch=args.batch, seed=0,
+                             process_index=jax.process_index(),
+                             process_count=jax.process_count())
+        sup = Supervisor(
+            step_fn=step_fn,
+            batch_fn=lambda s: {k: jnp.asarray(v)
+                                for k, v in ds.batch(s).items()},
+            ckpt=CheckpointManager(args.ckpt_dir, keep=3),
+            ckpt_every=args.ckpt_every,
+            monitor=StragglerMonitor(n_hosts=max(jax.process_count(), 1)))
+
+        # resume if a checkpoint exists (restart semantics)
+        restored = sup.ckpt.restore_latest(like=state)
+        start = 0
+        if restored is not None:
+            state, start = restored
+            print(f"[train] resuming from step {start}")
+        t0 = time.perf_counter()
+        state = sup.run(state, start_step=start, num_steps=args.steps)
+        dt = time.perf_counter() - t0
+
+    losses = [h["metrics"]["loss"] for h in sup.history
+              if h["event"] == "step"]
+    print(f"[train] {len(losses)} steps in {dt:.1f}s "
+          f"({dt / max(len(losses), 1):.2f} s/step); "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .registry import build_model, ARCH_FAMILIES  # noqa: F401

@@ -1,0 +1,633 @@
+"""Shared neural blocks for the assigned architectures.
+
+Every block provides ``init_*`` (parameters), ``spec_*`` (PartitionSpec
+tree, same structure) and an apply function. Parameters never carry the
+layer dimension here — the decoder stacks them and scans (constant compile
+time in depth). Sharding axes:
+
+* ``model`` — tensor parallel (heads / ffn / experts / vocab)
+* ``data``  — FSDP for weights, batch for activations (+ ``pod`` when the
+  multi-pod mesh is active)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+
+def _init(rng, shape, scale, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * scale) \
+        .astype(dtype)
+
+
+def shard_batch(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Pin the batch dim to the data-parallel mesh axes. Without this the
+    GSPMD propagator is free to replicate activations inside the layer
+    scan (observed: 900 GiB/device stashes). No-op off-mesh."""
+    try:
+        axes = cfg.batch_axes
+        spec = P(tuple(axes) if len(axes) > 1 else axes[0],
+                 *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x                    # no mesh context (CPU tests)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def spec_rmsnorm() -> Dict:
+    return {"scale": P(None)}
+
+
+def rms_norm(x: jnp.ndarray, p: Dict, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * p["scale"].astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def spec_layernorm() -> Dict:
+    return {"scale": P(None), "bias": P(None)}
+
+
+def layer_norm(x: jnp.ndarray, p: Dict, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(x.dtype) * p["scale"].astype(x.dtype)
+            + p["bias"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, D). positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, h)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm, optional sliding window)
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig) -> Dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": _init(ks[0], (d, hq * hd), s, cfg.pdtype),
+        "wk": _init(ks[1], (d, hkv * hd), s, cfg.pdtype),
+        "wv": _init(ks[2], (d, hkv * hd), s, cfg.pdtype),
+        "wo": _init(ks[3], (hq * hd, d), 1.0 / math.sqrt(hq * hd),
+                    cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, cfg.pdtype)
+        p["k_norm"] = init_rmsnorm(hd, cfg.pdtype)
+    return p
+
+
+def spec_attention(cfg: ModelConfig) -> Dict:
+    sp = {
+        "wq": P("data", "model"),
+        "wk": P("data", "model"),
+        "wv": P("data", "model"),
+        "wo": P("model", "data"),
+    }
+    if cfg.qk_norm:
+        sp["q_norm"] = spec_rmsnorm()
+        sp["k_norm"] = spec_rmsnorm()
+    return sp
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)  # (B,H,S,D)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _sdpa(q, k, v, causal: bool, window: int, q_offset,
+          impl: str = "xla", chunk: int = 2048,
+          scores_f32: bool = True, gqa_mode: str = "repeat") -> jnp.ndarray:
+    """q: (B,Hq,Sq,D); k,v: (B,Hkv,Skv,D).
+
+    GQA modes (§Perf): "repeat" expands K/V to Hq heads (extra HBM copies
+    but head dim stays 16-way shardable); "grouped" reshapes queries to
+    (B, Hkv, G, Sq, D) against unexpanded K/V — fewer K/V bytes but the
+    (Hkv, G) split misaligns with the model axis when Hkv < 16 and
+    *regresses* (measured: +6% memory term on deepseek train — refuted
+    hypothesis, kept as a knob). Long sequences scan over query chunks
+    (memory-efficient attention): the (Sq, Skv) score matrix never fully
+    materializes. ``scores_f32=False`` keeps scores in bf16 (halves their
+    HBM traffic; ~2 digit logit precision loss).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if impl == "pallas" and window <= 0:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal)
+    grouped = (gqa_mode == "grouped" and hkv != hq)
+    if not grouped and hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    g = hq // hkv
+    skv = k.shape[2]
+    acc_t = jnp.float32 if scores_f32 else q.dtype
+
+    def attend(qc, qpos):
+        cq = qc.shape[2]
+        if grouped:
+            qg = qc.reshape(b, hkv, g, cq, d)
+            scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                                preferred_element_type=acc_t)
+        else:
+            scores = jnp.einsum("bhqd,bhkd->bhqk", qc, k,
+                                preferred_element_type=acc_t)
+        scores = scores / math.sqrt(d)
+        ki = jnp.arange(skv)[None, :]
+        qi = qpos[:, None]
+        mask = jnp.ones((cq, skv), bool)
+        if causal:
+            mask &= qi >= ki
+        if window > 0:
+            mask &= ki > qi - window
+        big_neg = -1e30 if scores_f32 else -3e38
+        mask_b = (mask[None, None, None] if grouped
+                  else mask[None, None])
+        scores = jnp.where(mask_b, scores, big_neg)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(qc.dtype)
+        if grouped:
+            out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v)
+            return out.reshape(b, hq, cq, d)
+        return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+    if chunk <= 0 or sq <= chunk:
+        return attend(q, jnp.arange(sq) + q_offset)
+
+    if sq % chunk:
+        # largest divisor of sq no bigger than the requested chunk
+        # (e.g. the VLM's 4352-token patch+text sequence with chunk 2048)
+        chunk = math.gcd(sq, chunk)
+        if chunk < 128:
+            return attend(q, jnp.arange(sq) + q_offset)
+    n_chunks = sq // chunk
+    qs = q.reshape(b, hq, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def body(_, i):
+        qpos = i * chunk + jnp.arange(chunk) + q_offset
+        return None, attend(qs[i], qpos)
+
+    _, out = jax.lax.scan(jax.checkpoint(body), None,
+                          jnp.arange(n_chunks))
+    return out.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, d)
+
+
+def attention(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+              positions: jnp.ndarray,
+              cache: Optional[Tuple] = None,
+              window: int = 0) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    """Full-sequence (cache=None) or cached decode/prefill attention.
+
+    cache = (k_cache, v_cache, index): k/v (B, Hkv, S_max, D). Returns
+    (out, new_cache).
+    """
+    hq, hkv, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+    q = _split_heads(x @ p["wq"], hq, hd)
+    k = _split_heads(x @ p["wk"], hkv, hd)
+    v = _split_heads(x @ p["wv"], hkv, hd)
+    if cfg.attn_head_shard and cache is None:
+        # Megatron-style: heads on the model axis, head_dim whole — the
+        # qk/pv contractions become shard-local (no score all-reduce)
+        ba = (tuple(cfg.batch_axes) if len(cfg.batch_axes) > 1
+              else cfg.batch_axes[0])
+        q = _constrain(q, P(ba, "model", None, None))
+        k = _constrain(k, P(ba, "model", None, None))
+        v = _constrain(v, P(ba, "model", None, None))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta) \
+        .transpose(0, 2, 1, 3)
+    k = rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta) \
+        .transpose(0, 2, 1, 3)
+
+    if cache is None:
+        out = _sdpa(q, k, v, causal=True, window=window, q_offset=0,
+                    impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                    scores_f32=cfg.attn_scores_f32,
+                    gqa_mode=cfg.gqa_mode)
+        new_cache = None
+    else:
+        k_c, v_c, idx = cache
+        k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k, idx, axis=2)
+        v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v, idx, axis=2)
+        s_max = k_c.shape[2]
+        # mask out beyond current index via positions
+        # decode path: grouped GQA by default — heads are unsharded here,
+        # so there is no alignment penalty, and K/V repeat would multiply
+        # the whole cache by Hq/Hkv (measured 9.7x on the decode bound,
+        # §Perf C3)
+        decode_gqa = ("grouped" if cfg.gqa_mode == "repeat"
+                      else cfg.gqa_mode)
+        out = _sdpa(q, k_c, v_c, causal=True, window=window, q_offset=idx,
+                    impl="xla", chunk=cfg.attn_chunk,
+                    scores_f32=cfg.attn_scores_f32,
+                    gqa_mode=decode_gqa)
+        new_cache = (k_c, v_c, idx + q.shape[2])
+    return _merge_heads(out) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    s = 1.0 / math.sqrt(d)
+    p = {"w_up": _init(ks[0], (d, f), s, cfg.pdtype),
+         "w_down": _init(ks[1], (f, d), 1.0 / math.sqrt(f), cfg.pdtype)}
+    if cfg.activation == "swiglu":
+        p["w_gate"] = _init(ks[2], (d, f), s, cfg.pdtype)
+    return p
+
+
+def spec_mlp(cfg: ModelConfig) -> Dict:
+    sp = {"w_up": P("data", "model"), "w_down": P("model", "data")}
+    if cfg.activation == "swiglu":
+        sp["w_gate"] = P("data", "model")
+    return sp
+
+
+def mlp(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    up = x @ p["w_up"]
+    if cfg.activation == "swiglu":
+        act = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        act = jax.nn.gelu(up)
+    return act @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based capacity dispatch, expert-parallel)
+# ---------------------------------------------------------------------------
+
+def init_moe(rng, cfg: ModelConfig) -> Dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(rng, 5)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": _init(ks[0], (d, e), s, jnp.float32),
+        "w_up": _init(ks[1], (e, d, f), s, cfg.pdtype),
+        "w_gate": _init(ks[2], (e, d, f), s, cfg.pdtype),
+        "w_down": _init(ks[3], (e, f, d), 1.0 / math.sqrt(f), cfg.pdtype),
+    }
+    if m.d_ff_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=m.d_ff_shared)
+    return p
+
+
+def spec_moe(cfg: ModelConfig) -> Dict:
+    # expert parallelism when the expert count divides the model axis;
+    # otherwise fall back to tensor-sharding each expert's matrices
+    # (e.g. granite's 40 experts on a 16-wide axis)
+    if cfg.moe.num_experts % 16 == 0:
+        sp = {
+            "router": P(None, None),
+            "w_up": P("model", "data", None),
+            "w_gate": P("model", "data", None),
+            "w_down": P("model", None, "data"),
+        }
+    else:
+        sp = {
+            "router": P(None, None),
+            "w_up": P(None, "data", "model"),
+            "w_gate": P(None, "data", "model"),
+            "w_down": P(None, "model", "data"),
+        }
+    if cfg.moe.d_ff_shared:
+        sp["shared"] = spec_mlp(cfg)
+    return sp
+
+
+def moe(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Top-k token-choice MoE with GShard-style *grouped* dispatch.
+
+    Tokens are split into G groups (G = data-parallel axis size, so each
+    group's sort/scatter stays shard-local and never induces a global
+    buffer all-reduce); within a group, entries are sorted by expert and
+    scattered into a (G, E, C_g, D) buffer whose expert dim is
+    model-sharded — the group→expert reshard is the MoE all-to-all. The
+    expert matmuls are uniform batched GEMMs; overflow beyond the per-
+    group capacity C_g is dropped (Switch-style).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.top_k
+    e = m.num_experts
+    g = max(1, math.gcd(cfg.moe_groups, t))
+    tl = t // g                                  # tokens per group
+    cap = int(math.ceil(tl * k / e * m.capacity_factor))
+    cap = max(4, min(cap, tl))
+
+    xf = x.reshape(g, tl, d)
+    xf = _constrain(xf, P("data", None, None))
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (G, TL, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, k)                   # (G, TL, k)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_group(xg, eg, gg):
+        """xg: (TL, D); eg/gg: (TL, k) -> buffer (E, C, D), slot info."""
+        flat_e = eg.reshape(-1)                              # (TL*k,)
+        order = jnp.argsort(flat_e)
+        se = flat_e[order]
+        tok = order // k
+        starts = jnp.searchsorted(se, jnp.arange(e))
+        pos = jnp.arange(tl * k) - starts[se]
+        keep = pos < cap
+        slot = jnp.where(keep, se * cap + pos, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), cfg.adtype)
+        buf = buf.at[slot].set(xg[tok].astype(cfg.adtype), mode="drop")
+        return buf[:e * cap].reshape(e, cap, d), (order, tok, slot, keep)
+
+    h, (order, tok, slot, keep) = jax.vmap(dispatch_group)(xf, top_e,
+                                                           top_g)
+    h = _constrain(h, P("data", "model", None, None))        # all-to-all
+
+    up = jnp.einsum("gecd,edf->gecf", h, p["w_up"])
+    gate = jnp.einsum("gecd,edf->gecf", h, p["w_gate"])
+    out_e = jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up,
+                       p["w_down"])
+    out_e = _constrain(out_e, P("data", "model", None, None))
+
+    def combine_group(oe, og, info):
+        order_g, tok_g, slot_g, keep_g = info
+        flat = oe.reshape(e * cap, d)
+        flat = jnp.concatenate([flat, jnp.zeros((1, d), flat.dtype)], 0)
+        gathered = flat[slot_g] * og.reshape(-1)[order_g][:, None] \
+            .astype(cfg.adtype)
+        return jnp.zeros((tl, d), cfg.adtype).at[tok_g].add(
+            jnp.where(keep_g[:, None], gathered, 0))
+
+    y = jax.vmap(combine_group)(out_e, top_g, (order, tok, slot, keep))
+    y = _constrain(y, P("data", None, None)).reshape(b, s, d)
+    if m.d_ff_shared:
+        y = y + mlp(p["shared"], x, cfg)
+    return y
+
+
+def _constrain(x: jnp.ndarray, spec: P) -> jnp.ndarray:
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x                      # no mesh context (CPU tests)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) — diagonal linear recurrence via associative scan
+# ---------------------------------------------------------------------------
+
+def init_rglru(rng, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    w = cfg.hybrid.lru_width or d
+    ks = jax.random.split(rng, 5)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_x": _init(ks[0], (d, w), s, cfg.pdtype),
+        "w_gate_a": _init(ks[1], (d, w), s, cfg.pdtype),
+        "w_gate_x": _init(ks[2], (d, w), s, cfg.pdtype),
+        "w_out": _init(ks[3], (w, d), 1.0 / math.sqrt(w), cfg.pdtype),
+        # Λ parametrized via softplus -> decay in (0, 1)
+        "lam": _init(ks[4], (w,), 1.0, jnp.float32) * 0.5 + 4.0,
+    }
+
+
+def spec_rglru(cfg: ModelConfig) -> Dict:
+    return {"w_x": P("data", "model"), "w_gate_a": P("data", "model"),
+            "w_gate_x": P("data", "model"), "w_out": P("model", "data"),
+            "lam": P("model")}
+
+
+def rglru(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+          state: Optional[jnp.ndarray] = None
+          ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """x: (B, S, D). Real-Gated LRU: h_t = a_t ⊙ h_{t-1} + sqrt(1-a²)⊙i_t."""
+    xb = x @ p["w_x"]                                   # (B, S, W)
+    ga = jax.nn.sigmoid((x @ p["w_gate_a"]).astype(jnp.float32))
+    gx = jax.nn.sigmoid((x @ p["w_gate_x"]).astype(jnp.float32))
+    c = -8.0 * jax.nn.softplus(-p["lam"])               # log a_base < 0
+    log_a = c[None, None, :] * ga                       # (B, S, W)
+    a = jnp.exp(log_a)
+    gated_x = (xb.astype(jnp.float32) * gx) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+
+    if state is None and x.shape[1] > 1:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        a_s, h = jax.lax.associative_scan(combine, (a, gated_x), axis=1)
+        new_state = h[:, -1]
+    else:
+        st = state if state is not None else jnp.zeros(
+            (x.shape[0], a.shape[-1]), jnp.float32)
+        h = a * st[:, None, :] + gated_x                # S == 1 decode
+        new_state = h[:, -1]
+    return h.astype(x.dtype) @ p["w_out"], new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(rng, cfg: ModelConfig) -> Dict:
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    d_in = s_cfg.expand * d
+    nh = s_cfg.num_heads or d_in // s_cfg.head_dim
+    n = s_cfg.state_dim
+    ks = jax.random.split(rng, 6)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        # projections for x, z (gate), B, C, dt
+        "w_in": _init(ks[0], (d, 2 * d_in + 2 * n + nh), sc, cfg.pdtype),
+        "conv": _init(ks[1], (s_cfg.conv_width, d_in + 2 * n), 0.3,
+                      cfg.pdtype),
+        "a_log": jnp.zeros((nh,), jnp.float32) - 0.5,
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": init_rmsnorm(d_in, cfg.pdtype),
+        "w_out": _init(ks[2], (d_in, d), 1.0 / math.sqrt(d_in), cfg.pdtype),
+    }
+
+
+def spec_mamba2(cfg: ModelConfig) -> Dict:
+    return {"w_in": P("data", "model"), "conv": P(None, "model"),
+            "a_log": P(None), "dt_bias": P(None), "d_skip": P(None),
+            "norm": spec_rmsnorm(), "w_out": P("model", "data")}
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+    """Depthwise causal conv. seq: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((seq.shape[0], k - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = state.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i][None, None]
+              for i in range(k))
+    return out, full[:, -(k - 1):]
+
+
+def mamba2(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+           state: Optional[Tuple] = None
+           ) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    """SSD mixer. state = (h (B, NH, P, N), conv_state)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in = s_cfg.expand * d
+    nh = s_cfg.num_heads or d_in // s_cfg.head_dim
+    ph = d_in // nh
+    n = s_cfg.state_dim
+
+    zxbcdt = x @ p["w_in"]
+    z, xc, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_state = None if state is None else state[1]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :d_in]
+    bmat = conv_out[..., d_in:d_in + n]
+    cmat = conv_out[..., d_in + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,NH)
+    a = -jnp.exp(p["a_log"])                                     # (NH,)
+    xh = xc.reshape(b, s, nh, ph)
+
+    if state is None or s > 1:
+        # chunked SSD: Pallas kernel when requested, else jnp path
+        xf = xh.transpose(0, 2, 1, 3).reshape(b * nh, s, ph)
+        dtf = dt.transpose(0, 2, 1).reshape(b * nh, s)
+        af = jnp.tile(a, (b,))
+        bf = jnp.repeat(bmat[:, None], nh, 1).reshape(b * nh, s, n)
+        cf = jnp.repeat(cmat[:, None], nh, 1).reshape(b * nh, s, n)
+        if cfg.attn_impl == "pallas" and state is None:
+            from repro.kernels import ops as kops
+            y = kops.ssd_scan(xf.astype(jnp.float32), dtf, af,
+                              bf.astype(jnp.float32),
+                              cf.astype(jnp.float32), chunk=s_cfg.chunk)
+            new_h = None
+        else:
+            y, h_last = _ssd_xla(xf.astype(jnp.float32), dtf, af,
+                                 bf.astype(jnp.float32),
+                                 cf.astype(jnp.float32), s_cfg.chunk,
+                                 return_state=True)
+            new_h = (None if state is None
+                     else h_last.reshape(b, nh, ph, n))
+        y = y.reshape(b, nh, s, ph).transpose(0, 2, 1, 3)
+    else:
+        h = state[0]                                     # (B, NH, P, N)
+        dtb = dt[:, 0]                                   # (B, NH)
+        decay = jnp.exp(dtb * a[None])[:, :, None, None]
+        upd = (dtb[:, :, None] * xh[:, 0].astype(jnp.float32)
+               )[..., None] * bmat[:, 0].astype(jnp.float32)[:, None, None, :]
+        h = h * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, cmat[:, 0].astype(jnp.float32))
+        y = y.reshape(b, 1, nh, ph)
+        new_h = h
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    new_state = None if state is None else (new_h, new_conv)
+    return out, new_state
+
+
+def _ssd_xla(x, dt, a, bmat, cmat, chunk: int, return_state: bool = False):
+    """Chunked SSD in plain jnp (same math as kernels/ssd_scan).
+    return_state=True also returns the final (BH, P, N) state (prefill)."""
+    bh, l, p = x.shape
+    n = bmat.shape[-1]
+    if l % chunk:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    lp = x.shape[1]
+    nc = lp // chunk
+    xc = x.reshape(bh, nc, chunk, p)
+    dtc = dt.reshape(bh, nc, chunk)
+    bc = bmat.reshape(bh, nc, chunk, n)
+    cc = cmat.reshape(bh, nc, chunk, n)
+    da = dtc * a[:, None, None]
+    seg = jnp.cumsum(da, axis=-1)                         # (BH,NC,C)
+    scores = jnp.einsum("bntk,bnuk->bntu", cc, bc)
+    lmat = jnp.exp(seg[..., :, None] - seg[..., None, :])
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(tri[None, None], scores * lmat, 0.0) * dtc[..., None, :]
+    y_intra = jnp.einsum("bntu,bnup->bntp", w, xc)
+
+    # inter-chunk state carry (scan over chunks)
+    decay_tail = jnp.exp(seg[..., -1:] - seg)             # (BH,NC,C)
+    xb = jnp.einsum("bnc,bncp,bncq->bnpq", dtc * decay_tail, xc, bc)
+    chunk_decay = jnp.exp(seg[..., -1])                   # (BH,NC)
+
+    def scan_fn(h, inp):
+        xb_c, dec_c = inp
+        h_new = h * dec_c[:, None, None] + xb_c
+        return h_new, h
+    (h_final, h_prev) = jax.lax.scan(
+        scan_fn, jnp.zeros((bh, p, n), jnp.float32),
+        (xb.transpose(1, 0, 2, 3), chunk_decay.T))
+    h_prev = h_prev.transpose(1, 0, 2, 3)                 # state BEFORE chunk
+    y_inter = jnp.einsum("bntk,bnpk,bnt->bntp", cc, h_prev,
+                         jnp.exp(seg))
+    y = (y_intra + y_inter).reshape(bh, lp, p)[:, :l]
+    if return_state:
+        return y, h_final
+    return y

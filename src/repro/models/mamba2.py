@@ -1,0 +1,109 @@
+"""Mamba-2 (SSD, state-space duality, arXiv:2405.21060): attention-free
+LM. Decode is O(1) in sequence length (carried (NH, P, N) state), so the
+long_500k cell runs for this arch. Training/prefill uses the chunked SSD
+algorithm (Pallas kernel or the jnp chunked path)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .config import ModelConfig
+from .stacking import scan_layers, stacked_init, stacked_specs
+
+
+class Mamba2LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _init_layer(self, rng):
+        cfg = self.cfg
+        return {"ln": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+                "mixer": L.init_mamba2(rng, cfg)}
+
+    def init_params(self, rng) -> Dict:
+        cfg = self.cfg
+        k0, k1 = jax.random.split(rng)
+        return {
+            "embed": L._init(k0, (cfg.padded_vocab, cfg.d_model), 1.0,
+                             cfg.pdtype),
+            "ln_f": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "layers": stacked_init(self._init_layer, k1, cfg.num_layers),
+        }
+
+    def param_specs(self) -> Dict:
+        cfg = self.cfg
+        lspec = {"ln": L.spec_rmsnorm(), "mixer": L.spec_mamba2(cfg)}
+        return {"embed": P("model", None), "ln_f": L.spec_rmsnorm(),
+                "layers": stacked_specs(lspec, cfg.num_layers)}
+
+    def hidden(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(cfg.adtype)
+        x = L.shard_batch(x, cfg)
+
+        def block(lp, h, _):
+            h = L.shard_batch(h, cfg)
+            y, _st = L.mamba2(lp["mixer"],
+                              L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg)
+            return L.shard_batch(h + y, cfg)
+
+        x = scan_layers(block, params["layers"], x, remat=cfg.remat)
+        return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+    def unembed(self, params: Dict) -> jnp.ndarray:
+        return params["embed"].T
+
+    def logits(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        return (self.hidden(params, batch)
+                @ self.unembed(params).astype(self.cfg.adtype)) \
+            .astype(jnp.float32)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        s_cfg = cfg.ssm
+        d_in = s_cfg.expand * cfg.d_model
+        nh = s_cfg.num_heads or d_in // s_cfg.head_dim
+        ph = d_in // nh
+        n = s_cfg.state_dim
+        conv_c = d_in + 2 * n
+        l = cfg.num_layers
+        return {
+            "index": jnp.zeros((), jnp.int32),
+            "h": jnp.zeros((l, batch, nh, ph, n), jnp.float32),
+            "conv": jnp.zeros((l, batch, s_cfg.conv_width - 1, conv_c),
+                              cfg.adtype),
+        }
+
+    def cache_specs(self) -> Dict:
+        return {"index": P(),
+                "h": P(None, "data", "model", None, None),
+                "conv": P(None, "data", None, "model")}
+
+    def forward_cached(self, params: Dict, cache: Dict,
+                       batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(cfg.adtype)
+        idx = cache["index"]
+
+        def block(h, inp):
+            lp, st_h, st_conv = inp
+            y, new_st = L.mamba2(lp["mixer"],
+                                 L.rms_norm(h, lp["ln"], cfg.norm_eps),
+                                 cfg, state=(st_h, st_conv))
+            return h + y, new_st
+
+        x, (new_h, new_conv) = jax.lax.scan(
+            block, x, (params["layers"], cache["h"], cache["conv"]))
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = (x[:, -1:] @ params["embed"].T.astype(cfg.adtype)) \
+            .astype(jnp.float32)
+        return logits, {"index": idx + batch["tokens"].shape[1],
+                        "h": new_h, "conv": new_conv}
+
+    prefill = forward_cached
+    decode_step = forward_cached

@@ -1,0 +1,313 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU + local sliding-window attention
+in a 2:1 pattern (arXiv:2402.19427). Sub-quadratic: decode state is O(1)
+(LRU state + a fixed window), so the long_500k cell runs for this arch.
+
+Layer = temporal-mixing block (RG-LRU or local attention) + MLP block,
+pre-norm residuals. 26 layers = 8 scanned (rglru, rglru, local_attn)
+groups + 2 tail rglru layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .config import ModelConfig
+from .stacking import (scan_layers, scan_layers_with_cache, stacked_init,
+                       stacked_specs)
+
+
+class RecurrentGemmaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        pat = len(cfg.hybrid.pattern)           # 3
+        self.n_groups = cfg.num_layers // pat
+        self.n_tail = cfg.num_layers - self.n_groups * pat
+
+    # ------------------------------------------------------------ params
+    def _init_rglru_layer(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        return {"ln1": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+                "mix": L.init_rglru(k1, cfg),
+                "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+                "mlp": L.init_mlp(k2, cfg)}
+
+    def _init_attn_layer(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        return {"ln1": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+                "attn": L.init_attention(k1, cfg),
+                "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+                "mlp": L.init_mlp(k2, cfg)}
+
+    def _init_group(self, rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {"r1": self._init_rglru_layer(k1),
+                "r2": self._init_rglru_layer(k2),
+                "a": self._init_attn_layer(k3)}
+
+    def init_params(self, rng) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 4)
+        p = {"embed": L._init(ks[0], (cfg.padded_vocab, cfg.d_model), 1.0,
+                              cfg.pdtype),
+             "ln_f": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+             "groups": stacked_init(self._init_group, ks[1], self.n_groups)}
+        if self.n_tail:
+            p["tail"] = stacked_init(self._init_rglru_layer, ks[2],
+                                     self.n_tail)
+        return p
+
+    def param_specs(self) -> Dict:
+        cfg = self.cfg
+        r_spec = {"ln1": L.spec_rmsnorm(), "mix": L.spec_rglru(cfg),
+                  "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp(cfg)}
+        a_spec = {"ln1": L.spec_rmsnorm(), "attn": L.spec_attention(cfg),
+                  "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp(cfg)}
+        g_spec = {"r1": r_spec, "r2": r_spec, "a": a_spec}
+        sp = {"embed": P("model", None), "ln_f": L.spec_rmsnorm(),
+              "groups": stacked_specs(g_spec, self.n_groups)}
+        if self.n_tail:
+            sp["tail"] = stacked_specs(r_spec, self.n_tail)
+        return sp
+
+    # ------------------------------------------------------------ blocks
+    def _rglru_layer(self, lp, x, state=None):
+        cfg = self.cfg
+        h, new_state = L.rglru(lp["mix"],
+                               L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                               cfg, state)
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                      cfg)
+        return x, new_state
+
+    def _attn_layer(self, lp, x, positions, cache=None, idx=None):
+        cfg = self.cfg
+        z = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cache is None:
+            h, new_kv = L.attention(lp["attn"], z, cfg, positions,
+                                    window=cfg.hybrid.window)
+        else:
+            h, new_kv = L.attention(lp["attn"], z, cfg, positions,
+                                    cache=(cache["k"], cache["v"], idx),
+                                    window=cfg.hybrid.window)
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                      cfg)
+        return x, new_kv
+
+    # ------------------------------------------------------------ training
+    def hidden(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"][tokens].astype(cfg.adtype)
+        x = L.shard_batch(x, cfg)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def group_fn(lp, h, e):
+            h = L.shard_batch(h, cfg)
+            h, _ = self._rglru_layer(lp["r1"], h)
+            h, _ = self._rglru_layer(lp["r2"], h)
+            h, _ = self._attn_layer(lp["a"], h, e)
+            return L.shard_batch(h, cfg)
+
+        x = scan_layers(group_fn, params["groups"], x, remat=cfg.remat,
+                        carry_extra=positions)
+        if self.n_tail:
+            def tail_fn(lp, h, e):
+                h, _ = self._rglru_layer(lp, h)
+                return L.shard_batch(h, cfg)
+            x = scan_layers(tail_fn, params["tail"], x, remat=cfg.remat,
+                            carry_extra=positions)
+        return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+    def unembed(self, params: Dict) -> jnp.ndarray:
+        return params["embed"].T
+
+    def logits(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        return (self.hidden(params, batch)
+                @ self.unembed(params).astype(self.cfg.adtype)) \
+            .astype(jnp.float32)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        w = min(cfg.hybrid.window, max_seq)
+        lru_w = cfg.hybrid.lru_width or cfg.d_model
+        kv = (batch, cfg.kv_heads, w, cfg.hd)
+        g = self.n_groups
+        cache = {
+            "index": jnp.zeros((), jnp.int32),
+            "groups": {
+                "s1": jnp.zeros((g, batch, lru_w), jnp.float32),
+                "s2": jnp.zeros((g, batch, lru_w), jnp.float32),
+                "k": jnp.zeros((g,) + kv, cfg.adtype),
+                "v": jnp.zeros((g,) + kv, cfg.adtype),
+            },
+        }
+        if self.n_tail:
+            cache["tail"] = jnp.zeros((self.n_tail, batch, lru_w),
+                                      jnp.float32)
+        return cache
+
+    def cache_specs(self) -> Dict:
+        sp = {"index": P(),
+              "groups": {"s1": P(None, "data", "model"),
+                         "s2": P(None, "data", "model"),
+                         "k": P(None, "data", None, "model", None),
+                         "v": P(None, "data", None, "model", None)}}
+        if self.n_tail:
+            sp["tail"] = P(None, "data", "model")
+        return sp
+
+    def forward_cached(self, params: Dict, cache: Dict,
+                       batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        """Decode/short-prefill with rolling window cache.
+
+        The KV cache keeps the last ``window`` positions; slot = pos %
+        window, masking handles wrap-around (O(window) per step).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        idx = cache["index"]
+        x = params["embed"][tokens].astype(cfg.adtype)
+        b, s, _ = x.shape
+        positions = idx + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        w = cache["groups"]["k"].shape[3]
+
+        def group_fn(h, inp):
+            lp, c = inp
+            h, s1 = self._rglru_layer(lp["r1"], h, c["s1"])
+            h, s2 = self._rglru_layer(lp["r2"], h, c["s2"])
+            # windowed attention against rolled cache
+            z = L.rms_norm(h, lp["a"]["ln1"], cfg.norm_eps)
+            hq, hkv, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+            q = L._split_heads(z @ lp["a"]["attn"]["wq"], hq, hd)
+            k = L._split_heads(z @ lp["a"]["attn"]["wk"], hkv, hd)
+            v = L._split_heads(z @ lp["a"]["attn"]["wv"], hkv, hd)
+            if cfg.qk_norm:
+                q = L.rms_norm(q, lp["a"]["attn"]["q_norm"], cfg.norm_eps)
+                k = L.rms_norm(k, lp["a"]["attn"]["k_norm"], cfg.norm_eps)
+            q = L.rope(q.transpose(0, 2, 1, 3), positions,
+                       cfg.rope_theta).transpose(0, 2, 1, 3)
+            k = L.rope(k.transpose(0, 2, 1, 3), positions,
+                       cfg.rope_theta).transpose(0, 2, 1, 3)
+            slot = idx % w
+            k_c = jax.lax.dynamic_update_slice_in_dim(c["k"], k, slot,
+                                                      axis=2)
+            v_c = jax.lax.dynamic_update_slice_in_dim(c["v"], v, slot,
+                                                      axis=2)
+            # key absolute positions per slot
+            slots = jnp.arange(w)
+            key_pos = jnp.where(slots <= slot, idx - slot + slots,
+                                idx - slot + slots - w)
+            scores = jnp.einsum("bhqd,bhkd->bhqk",
+                                q, jnp.repeat(k_c, hq // hkv, 1),
+                                preferred_element_type=jnp.float32) \
+                / math.sqrt(hd)
+            valid = (key_pos[None, None, None] >= 0) & \
+                    (key_pos[None, None, None] <= positions[:, None, :,
+                                                            None])
+            scores = jnp.where(valid, scores, -1e30)
+            probs = jax.nn.softmax(scores, -1).astype(cfg.adtype)
+            att = jnp.einsum("bhqk,bhkd->bhqd", probs,
+                             jnp.repeat(v_c, hq // hkv, 1))
+            h = h + L._merge_heads(att) @ lp["a"]["attn"]["wo"]
+            h = h + L.mlp(lp["a"]["mlp"],
+                          L.rms_norm(h, lp["a"]["ln2"], cfg.norm_eps), cfg)
+            return h, {"s1": s1, "s2": s2, "k": k_c, "v": v_c}
+
+        x, new_groups = jax.lax.scan(group_fn, x,
+                                     (params["groups"], cache["groups"]))
+        new_cache = {"index": idx + s, "groups": new_groups}
+        if self.n_tail:
+            def tail_fn(h, inp):
+                lp, st = inp
+                h, ns = self._rglru_layer(lp, h, st)
+                return h, ns
+            x, new_tail = jax.lax.scan(tail_fn, x,
+                                       (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = (x[:, -1:] @ params["embed"].T.astype(cfg.adtype)) \
+            .astype(jnp.float32)
+        return logits, new_cache
+
+    def prefill(self, params: Dict, cache: Dict,
+                batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        """Long prefill: full-sequence processing (associative-scan LRU +
+        windowed attention), then the rolling cache is seeded with the
+        final LRU states and the last ``window`` keys/values."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        w = cache["groups"]["k"].shape[3]
+        if s <= 1:
+            return self.forward_cached(params, cache, batch)
+        x = params["embed"][tokens].astype(cfg.adtype)
+        x = L.shard_batch(x, cfg)
+        b = x.shape[0]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        hq, hkv, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+
+        def seed_cache(k, v, kc, vc):
+            """Place the last min(s, w) keys at slot = pos %% w."""
+            if s >= w:
+                kw = jnp.roll(k[:, :, -w:], s % w, axis=2)
+                vw = jnp.roll(v[:, :, -w:], s % w, axis=2)
+                return kw.astype(kc.dtype), vw.astype(vc.dtype)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.astype(kc.dtype), 0, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.astype(vc.dtype), 0, axis=2)
+            return kc, vc
+
+        def group_fn(h, inp):
+            lp, c = inp
+            h, s1 = self._rglru_layer(lp["r1"], h)
+            h, s2 = self._rglru_layer(lp["r2"], h)
+            z = L.rms_norm(h, lp["a"]["ln1"], cfg.norm_eps)
+            q = L._split_heads(z @ lp["a"]["attn"]["wq"], hq, hd)
+            k = L._split_heads(z @ lp["a"]["attn"]["wk"], hkv, hd)
+            v = L._split_heads(z @ lp["a"]["attn"]["wv"], hkv, hd)
+            if cfg.qk_norm:
+                q = L.rms_norm(q, lp["a"]["attn"]["q_norm"], cfg.norm_eps)
+                k = L.rms_norm(k, lp["a"]["attn"]["k_norm"], cfg.norm_eps)
+            q = L.rope(q.transpose(0, 2, 1, 3), positions,
+                       cfg.rope_theta).transpose(0, 2, 1, 3)
+            k = L.rope(k.transpose(0, 2, 1, 3), positions,
+                       cfg.rope_theta).transpose(0, 2, 1, 3)
+            att = L._sdpa(q, k, v, causal=True, window=cfg.hybrid.window,
+                          q_offset=0, chunk=cfg.attn_chunk)
+            h = h + L._merge_heads(att) @ lp["a"]["attn"]["wo"]
+            h = h + L.mlp(lp["a"]["mlp"],
+                          L.rms_norm(h, lp["a"]["ln2"], cfg.norm_eps),
+                          cfg)
+            kc, vc = seed_cache(k, v, c["k"], c["v"])
+            return L.shard_batch(h, cfg), {"s1": s1, "s2": s2,
+                                           "k": kc, "v": vc}
+
+        x, new_groups = jax.lax.scan(group_fn, x,
+                                     (params["groups"], cache["groups"]))
+        new_cache = {"index": cache["index"] + s, "groups": new_groups}
+        if self.n_tail:
+            def tail_fn(h, inp):
+                lp, _ = inp
+                h, ns = self._rglru_layer(lp, h)
+                return h, ns
+            x, new_tail = jax.lax.scan(tail_fn, x,
+                                       (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = (x[:, -1:] @ params["embed"].T.astype(cfg.adtype)) \
+            .astype(jnp.float32)
+        return logits, new_cache
+
+    decode_step = forward_cached

@@ -1,0 +1,25 @@
+"""Model registry: family -> model class."""
+from __future__ import annotations
+
+from .config import ModelConfig
+from .mamba2 import Mamba2LM
+from .recurrentgemma import RecurrentGemmaLM
+from .transformer import TransformerLM
+from .whisper import WhisperEncDec
+
+ARCH_FAMILIES = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "vlm": TransformerLM,
+    "hybrid": RecurrentGemmaLM,
+    "audio": WhisperEncDec,
+    "ssm": Mamba2LM,
+}
+
+
+def build_model(cfg: ModelConfig):
+    try:
+        cls = ARCH_FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None
+    return cls(cfg)

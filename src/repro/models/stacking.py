@@ -1,0 +1,74 @@
+"""Layer stacking utilities: init a layer L times (stacked leading dim),
+scan over the stack, remat policies. Constant compile time in depth."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def stacked_init(layer_init: Callable, rng, n_layers: int) -> Dict:
+    """vmap the per-layer init over layer rngs -> params with leading L."""
+    rngs = jax.random.split(rng, n_layers)
+    return jax.vmap(layer_init)(rngs)
+
+
+def stacked_specs(layer_spec: Dict, n_layers: int) -> Dict:
+    """Prepend None (layer) axis to every PartitionSpec in the tree."""
+
+    def add_axis(s):
+        if isinstance(s, P):
+            return P(None, *s)
+        return s
+
+    return jax.tree.map(add_axis, layer_spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def remat_wrap(fn: Callable, policy: str) -> Callable:
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy == "dots_no_batch":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(f"unknown remat policy {policy}")
+
+
+def scan_layers(block_fn: Callable, stacked_params: Dict, x: jnp.ndarray,
+                remat: str = "none", carry_extra=None,
+                unroll: int = 1):
+    """x flows through L layers; block_fn(layer_params, x, extra) -> x."""
+    fn = remat_wrap(block_fn, remat)
+
+    def body(carry, layer_params):
+        y = fn(layer_params, carry, carry_extra)
+        return y, None
+
+    out, _ = jax.lax.scan(body, x, stacked_params, unroll=unroll)
+    return out
+
+
+def scan_layers_with_cache(block_fn: Callable, stacked_params: Dict,
+                           x: jnp.ndarray, cache, carry_extra=None):
+    """Serve path: scans layers while threading per-layer cache slices.
+
+    cache: pytree with leading L dim on every leaf.
+    block_fn(layer_params, x, layer_cache, extra) -> (x, new_layer_cache)
+    """
+
+    def body(carry, inp):
+        layer_params, layer_cache = inp
+        y, new_cache = block_fn(layer_params, carry, layer_cache,
+                                carry_extra)
+        return y, new_cache
+
+    out, new_cache = jax.lax.scan(body, x, (stacked_params, cache))
+    return out, new_cache

@@ -1,0 +1,240 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM assigned
+architectures (tinyllama, phi3, deepseek-coder, qwen3, kimi-k2, granite,
+internvl2 backbone).
+
+Design: pre-norm blocks, GQA attention (+optional qk-norm), SwiGLU MLP or
+top-k MoE, RoPE, stacked-layer scan, optional leading dense layers before
+the MoE stack (Kimi-style), optional vision-patch prefix (InternVL stub
+frontend: ``input_specs`` feeds precomputed patch embeddings).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .config import ModelConfig
+from .stacking import (remat_wrap, scan_layers, scan_layers_with_cache,
+                       stacked_init, stacked_specs)
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        m = cfg.moe
+        self.n_dense = (cfg.num_layers if m is None or m.num_experts == 0
+                        else m.first_k_dense)
+        self.n_moe = cfg.num_layers - self.n_dense
+
+    # ------------------------------------------------------------ params
+    def _init_dense_layer(self, rng):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(rng, 4)
+        return {
+            "ln1": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "attn": L.init_attention(k1, cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "mlp": L.init_mlp(k2, cfg),
+        }
+
+    def _init_moe_layer(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        return {
+            "ln1": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "attn": L.init_attention(k1, cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "moe": L.init_moe(k2, cfg),
+        }
+
+    def init_params(self, rng) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(rng, 6)
+        p = {
+            "embed": L._init(keys[0], (cfg.padded_vocab, cfg.d_model),
+                             1.0, cfg.pdtype),
+            "ln_f": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = L._init(keys[1], (cfg.d_model, cfg.padded_vocab),
+                                   1.0 / math.sqrt(cfg.d_model), cfg.pdtype)
+        if self.n_dense:
+            p["dense_layers"] = stacked_init(self._init_dense_layer,
+                                             keys[2], self.n_dense)
+        if self.n_moe:
+            p["moe_layers"] = stacked_init(self._init_moe_layer, keys[3],
+                                           self.n_moe)
+        if cfg.vlm is not None:
+            p["patch_proj"] = L._init(keys[4],
+                                      (cfg.vlm.d_patch, cfg.d_model),
+                                      1.0 / math.sqrt(cfg.vlm.d_patch),
+                                      cfg.pdtype)
+        return p
+
+    def param_specs(self) -> Dict:
+        cfg = self.cfg
+        dense_spec = {
+            "ln1": L.spec_rmsnorm(), "attn": L.spec_attention(cfg),
+            "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp(cfg),
+        }
+        sp = {
+            "embed": P("model", None),
+            "ln_f": L.spec_rmsnorm(),
+        }
+        if not cfg.tie_embeddings:
+            sp["unembed"] = P(None, "model")
+        if self.n_dense:
+            sp["dense_layers"] = stacked_specs(dense_spec, self.n_dense)
+        if self.n_moe:
+            moe_spec = {
+                "ln1": L.spec_rmsnorm(), "attn": L.spec_attention(cfg),
+                "ln2": L.spec_rmsnorm(), "moe": L.spec_moe(cfg),
+            }
+            sp["moe_layers"] = stacked_specs(moe_spec, self.n_moe)
+        if cfg.vlm is not None:
+            sp["patch_proj"] = P(None, None)
+        return sp
+
+    # ------------------------------------------------------------ forward
+    def _block(self, lp, x, extra, kind: str):
+        cfg = self.cfg
+        positions = extra
+        x = L.shard_batch(x, cfg)
+        h, _ = L.attention(lp["attn"], L.rms_norm(x, lp["ln1"],
+                                                  cfg.norm_eps),
+                           cfg, positions)
+        x = x + h
+        z = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if kind == "dense":
+            x = x + L.mlp(lp["mlp"], z, cfg)
+        else:
+            x = x + L.moe(lp["moe"], z, cfg)
+        return L.shard_batch(x, cfg)
+
+    def _embed(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(cfg.adtype)
+        if cfg.vlm is not None and "patches" in batch:
+            vis = (batch["patches"].astype(cfg.adtype)
+                   @ params["patch_proj"].astype(cfg.adtype))
+            x = jnp.concatenate([vis, x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        return x, positions
+
+    def hidden(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        """Final-norm hidden states (B, S_tokens, D)."""
+        cfg = self.cfg
+        x, positions = self._embed(params, batch)
+        x = L.shard_batch(x, cfg)
+        if self.n_dense:
+            x = scan_layers(lambda lp, h, e: self._block(lp, h, e, "dense"),
+                            params["dense_layers"], x, remat=cfg.remat,
+                            carry_extra=positions)
+        if self.n_moe:
+            x = scan_layers(lambda lp, h, e: self._block(lp, h, e, "moe"),
+                            params["moe_layers"], x, remat=cfg.remat,
+                            carry_extra=positions)
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if cfg.vlm is not None and "patches" in batch:
+            x = x[:, -batch["tokens"].shape[1]:]
+        return x
+
+    def unembed(self, params: Dict) -> jnp.ndarray:
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["unembed"])
+
+    def logits(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        return (self.hidden(params, batch)
+                @ self.unembed(params).astype(self.cfg.adtype)) \
+            .astype(jnp.float32)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        shape = (batch, cfg.kv_heads, max_seq, cfg.hd)
+
+        def mk(n):
+            return {
+                "k": jnp.zeros((n,) + shape, cfg.adtype),
+                "v": jnp.zeros((n,) + shape, cfg.adtype),
+            }
+
+        cache = {"index": jnp.zeros((), jnp.int32)}
+        if self.n_dense:
+            cache["dense"] = mk(self.n_dense)
+        if self.n_moe:
+            cache["moe"] = mk(self.n_moe)
+        return cache
+
+    def cache_specs(self) -> Dict:
+        # "seq": batch on data, SEQUENCE on model — kv-head counts (4/8)
+        # don't divide the 16-way model axis, but the cache length always
+        # does; decode attention becomes sequence-parallel with a small
+        # psum. "batch": replicate over model (more HBM, no reshard) —
+        # the §Perf decode experiment compares the two.
+        if self.cfg.kv_cache_shard == "seq":
+            kv = {"k": P(None, "data", None, "model", None),
+                  "v": P(None, "data", None, "model", None)}
+        else:
+            kv = {"k": P(None, "data", None, None, None),
+                  "v": P(None, "data", None, None, None)}
+        sp = {"index": P()}
+        if self.n_dense:
+            sp["dense"] = dict(kv)
+        if self.n_moe:
+            sp["moe"] = dict(kv)
+        return sp
+
+    def _block_cached(self, lp, x, layer_cache, extra, kind: str):
+        cfg = self.cfg
+        positions, idx = extra
+        h, new_kv = L.attention(
+            lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+            positions, cache=(layer_cache["k"], layer_cache["v"], idx))
+        x = x + h
+        z = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if kind == "dense":
+            x = x + L.mlp(lp["mlp"], z, cfg)
+        else:
+            x = x + L.moe(lp["moe"], z, cfg)
+        return x, {"k": new_kv[0], "v": new_kv[1]}
+
+    def forward_cached(self, params: Dict, cache: Dict,
+                       batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        """Shared prefill/decode: consumes tokens, appends to cache."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        idx = cache["index"]
+        x = params["embed"][tokens].astype(cfg.adtype)
+        if cfg.vlm is not None and "patches" in batch:
+            vis = (batch["patches"].astype(cfg.adtype)
+                   @ params["patch_proj"].astype(cfg.adtype))
+            x = jnp.concatenate([vis, x], axis=1)
+        b, s, _ = x.shape
+        positions = idx + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        new_cache = {"index": idx + s}
+        for kind, key in (("dense", "dense"), ("moe", "moe")):
+            if key == "dense" and not self.n_dense:
+                continue
+            if key == "moe" and not self.n_moe:
+                continue
+            x, nc = scan_layers_with_cache(
+                lambda lp, h, c, e, _k=kind: self._block_cached(
+                    lp, h, c, e, _k),
+                params[f"{key}_layers"], x, cache[key],
+                carry_extra=(positions, idx))
+            new_cache[key] = nc
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        x_last = x[:, -1:]
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"])
+        logits = (x_last @ w.astype(cfg.adtype)).astype(jnp.float32)
+        return logits, new_cache
+
+    prefill = forward_cached
+    decode_step = forward_cached

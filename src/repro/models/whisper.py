@@ -1,0 +1,233 @@
+"""Whisper-medium encoder–decoder (arXiv:2212.04356). The conv frontend is
+a STUB per the assignment: ``input_specs()`` feeds precomputed frame
+embeddings (B, 1500, d_frame); a linear projection stands in for the two
+conv layers. Pre-LN LayerNorm (with bias), GELU MLPs, MHA (kv=16).
+
+"seq_len" for the decode/prefill shapes is the *decoder* self-attention
+length; the encoder length is fixed at 1500 frames.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .config import ModelConfig
+from .stacking import (scan_layers, scan_layers_with_cache, stacked_init,
+                       stacked_specs)
+
+
+class WhisperEncDec:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params
+    def _init_enc_layer(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        return {"ln1": L.init_layernorm(cfg.d_model, cfg.pdtype),
+                "attn": L.init_attention(k1, cfg),
+                "ln2": L.init_layernorm(cfg.d_model, cfg.pdtype),
+                "mlp": L.init_mlp(k2, cfg)}
+
+    def _init_dec_layer(self, rng):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {"ln1": L.init_layernorm(cfg.d_model, cfg.pdtype),
+                "self_attn": L.init_attention(k1, cfg),
+                "ln_x": L.init_layernorm(cfg.d_model, cfg.pdtype),
+                "cross_attn": L.init_attention(k2, cfg),
+                "ln2": L.init_layernorm(cfg.d_model, cfg.pdtype),
+                "mlp": L.init_mlp(k3, cfg)}
+
+    def init_params(self, rng) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 6)
+        e = cfg.encdec
+        return {
+            "frame_proj": L._init(ks[0], (e.d_frame, cfg.d_model),
+                                  1.0 / math.sqrt(e.d_frame), cfg.pdtype),
+            "enc_pos": L._init(ks[1], (e.encoder_seq, cfg.d_model), 0.02,
+                               cfg.pdtype),
+            "enc_layers": stacked_init(self._init_enc_layer, ks[2],
+                                       e.encoder_layers),
+            "ln_enc": L.init_layernorm(cfg.d_model, cfg.pdtype),
+            "embed": L._init(ks[3], (cfg.padded_vocab, cfg.d_model), 1.0,
+                             cfg.pdtype),
+            "dec_pos": L._init(ks[4], (cfg.max_seq, cfg.d_model), 0.02,
+                               cfg.pdtype),
+            "dec_layers": stacked_init(self._init_dec_layer, ks[5],
+                                       cfg.num_layers),
+            "ln_f": L.init_layernorm(cfg.d_model, cfg.pdtype),
+        }
+
+    def param_specs(self) -> Dict:
+        cfg = self.cfg
+        enc_spec = {"ln1": L.spec_layernorm(),
+                    "attn": L.spec_attention(cfg),
+                    "ln2": L.spec_layernorm(), "mlp": L.spec_mlp(cfg)}
+        dec_spec = {"ln1": L.spec_layernorm(),
+                    "self_attn": L.spec_attention(cfg),
+                    "ln_x": L.spec_layernorm(),
+                    "cross_attn": L.spec_attention(cfg),
+                    "ln2": L.spec_layernorm(), "mlp": L.spec_mlp(cfg)}
+        return {
+            "frame_proj": P(None, "model"),
+            "enc_pos": P(None, None),
+            "enc_layers": stacked_specs(enc_spec, cfg.encdec.encoder_layers),
+            "ln_enc": L.spec_layernorm(),
+            "embed": P("model", None),
+            "dec_pos": P(None, None),
+            "dec_layers": stacked_specs(dec_spec, cfg.num_layers),
+            "ln_f": L.spec_layernorm(),
+        }
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params: Dict, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = frames.astype(cfg.adtype) @ params["frame_proj"]
+        x = x + params["enc_pos"][None, :x.shape[1]].astype(cfg.adtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def block(lp, h, e):
+            h = L.shard_batch(h, cfg)
+            z = L.layer_norm(h, lp["ln1"])
+            a, _ = self._bidir_attn(lp["attn"], z)
+            h = h + a
+            h = h + L.mlp(lp["mlp"], L.layer_norm(h, lp["ln2"]), cfg)
+            return L.shard_batch(h, cfg)
+
+        x = scan_layers(block, params["enc_layers"], x, remat=cfg.remat,
+                        carry_extra=positions)
+        return L.layer_norm(x, params["ln_enc"])
+
+    def _bidir_attn(self, p, x, kv: jnp.ndarray = None):
+        """Bidirectional (or cross) attention, no RoPE (whisper style)."""
+        cfg = self.cfg
+        hq, hkv, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+        src = x if kv is None else kv
+        q = L._split_heads(x @ p["wq"], hq, hd)
+        k = L._split_heads(src @ p["wk"], hkv, hd)
+        v = L._split_heads(src @ p["wv"], hkv, hd)
+        out = L._sdpa(q, k, v, causal=False, window=0, q_offset=0)
+        return L._merge_heads(out) @ p["wo"], None
+
+    # ------------------------------------------------------------ training
+    def hidden(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        x = params["embed"][tokens].astype(cfg.adtype)
+        x = x + params["dec_pos"][None, :x.shape[1]].astype(cfg.adtype)
+        x = L.shard_batch(x, cfg)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def block(lp, h, e):
+            enc_out, pos = e
+            h = L.shard_batch(h, cfg)
+            z = L.layer_norm(h, lp["ln1"])
+            hq, hkv, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+            q = L._split_heads(z @ lp["self_attn"]["wq"], hq, hd)
+            k = L._split_heads(z @ lp["self_attn"]["wk"], hkv, hd)
+            v = L._split_heads(z @ lp["self_attn"]["wv"], hkv, hd)
+            a = L._sdpa(q, k, v, causal=True, window=0, q_offset=0)
+            h = h + L._merge_heads(a) @ lp["self_attn"]["wo"]
+            zx = L.layer_norm(h, lp["ln_x"])
+            cx, _ = self._bidir_attn(lp["cross_attn"], zx, kv=enc_out)
+            h = h + cx
+            h = h + L.mlp(lp["mlp"], L.layer_norm(h, lp["ln2"]), cfg)
+            return L.shard_batch(h, cfg)
+
+        x = scan_layers(block, params["dec_layers"], x, remat=cfg.remat,
+                        carry_extra=(enc, positions))
+        return L.layer_norm(x, params["ln_f"])
+
+    def unembed(self, params: Dict) -> jnp.ndarray:
+        return params["embed"].T
+
+    def logits(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        return (self.hidden(params, batch)
+                @ self.unembed(params).astype(self.cfg.adtype)) \
+            .astype(jnp.float32)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        l = cfg.num_layers
+        e = cfg.encdec
+        kv = (batch, cfg.kv_heads, max_seq, cfg.hd)
+        xkv = (batch, cfg.kv_heads, e.encoder_seq, cfg.hd)
+        return {
+            "index": jnp.zeros((), jnp.int32),
+            "k": jnp.zeros((l,) + kv, cfg.adtype),
+            "v": jnp.zeros((l,) + kv, cfg.adtype),
+            # cross-attention K/V are computed once from the encoder
+            "xk": jnp.zeros((l,) + xkv, cfg.adtype),
+            "xv": jnp.zeros((l,) + xkv, cfg.adtype),
+        }
+
+    def cache_specs(self) -> Dict:
+        kv = P(None, "data", "model", None, None)
+        return {"index": P(), "k": kv, "v": kv, "xk": kv, "xv": kv}
+
+    def prefill(self, params: Dict, cache: Dict,
+                batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        """Encode audio, precompute cross K/V, then run decoder tokens."""
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+
+        def xkv_fn(lp):
+            hkv, hd = cfg.kv_heads, cfg.hd
+            xk = L._split_heads(enc @ lp["cross_attn"]["wk"], hkv, hd)
+            xv = L._split_heads(enc @ lp["cross_attn"]["wv"], hkv, hd)
+            return xk, xv
+
+        xk, xv = jax.vmap(xkv_fn)(params["dec_layers"])
+        cache = dict(cache)
+        cache["xk"], cache["xv"] = xk, xv
+        return self.decode_step(params, cache, batch)
+
+    def decode_step(self, params: Dict, cache: Dict,
+                    batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        idx = cache["index"]
+        x = params["embed"][tokens].astype(cfg.adtype)
+        b, s, _ = x.shape
+        pos_ids = idx + jnp.arange(s)
+        x = x + jnp.take(params["dec_pos"], pos_ids, axis=0)[None] \
+            .astype(cfg.adtype)
+
+        def block(h, inp):
+            lp, kc, vc, xk, xv = inp
+            hq, hkv, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+            z = L.layer_norm(h, lp["ln1"])
+            q = L._split_heads(z @ lp["self_attn"]["wq"], hq, hd)
+            k = L._split_heads(z @ lp["self_attn"]["wk"], hkv, hd)
+            v = L._split_heads(z @ lp["self_attn"]["wv"], hkv, hd)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, idx, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, idx, axis=2)
+            a = L._sdpa(q, kc, vc, causal=True, window=0, q_offset=idx)
+            h = h + L._merge_heads(a) @ lp["self_attn"]["wo"]
+            zx = L.layer_norm(h, lp["ln_x"])
+            qx = L._split_heads(zx @ lp["cross_attn"]["wq"], hq, hd)
+            ax = L._sdpa(qx, xk, xv, causal=False, window=0, q_offset=0)
+            h = h + L._merge_heads(ax) @ lp["cross_attn"]["wo"]
+            h = h + L.mlp(lp["mlp"], L.layer_norm(h, lp["ln2"]), cfg)
+            return h, (kc, vc)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            block, x, (params["dec_layers"], cache["k"], cache["v"],
+                       cache["xk"], cache["xv"]))
+        x = L.layer_norm(x, params["ln_f"])
+        logits = (x[:, -1:] @ params["embed"].T.astype(cfg.adtype)) \
+            .astype(jnp.float32)
+        new_cache = dict(cache)
+        new_cache.update({"index": idx + s, "k": new_k, "v": new_v})
+        return logits, new_cache

@@ -1,0 +1,2 @@
+from .optimizers import adamw, adafactor, Optimizer  # noqa: F401
+from .schedules import cosine_schedule, linear_warmup  # noqa: F401

@@ -1,0 +1,157 @@
+"""Optimizers: AdamW (f32 states) and Adafactor (factored second moment,
+bf16 first moment) — the latter is what makes the 1T-param Kimi cell fit
+512 x 16 GiB (DESIGN.md). Global-norm clipping included. Optax-style
+(init/update) pure functions so states shard like params."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    #: returns PartitionSpec tree for the optimizer state, given param specs
+    state_specs: Callable[[Any], Any]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            m_hat = m_new / (1 - b1 ** t)
+            v_hat = v_new / (1 - b2 ** t)
+            delta = m_hat / (jnp.sqrt(v_hat) + eps) \
+                + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * delta).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v}
+
+    def state_specs(param_specs):
+        return {"m": param_specs, "v": param_specs}
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored v for matrices, bf16 m) — memory-lean for 1T params
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+              b1: float = 0.9, decay: float = 0.99, eps: float = 1e-30,
+              weight_decay: float = 0.0, clip_norm: float = 1.0
+              ) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def per_param(p):
+            if _factored(p):
+                return {
+                    "m": jnp.zeros(p.shape, jnp.bfloat16),
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32),
+                }
+            return {"m": jnp.zeros(p.shape, jnp.bfloat16),
+                    "v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(per_param, params)
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr_t = lr_fn(step)
+
+        def upd(g, st, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                vr = decay * st["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * st["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(
+                             jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                             eps))
+                precond = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = decay * st["v"] + (1 - decay) * g2
+                precond = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_st = {"v": v}
+            m = b1 * st["m"].astype(jnp.float32) + (1 - b1) * precond
+            new_st["m"] = m.astype(jnp.bfloat16)
+            delta = m + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * delta).astype(p.dtype), new_st
+
+        flat = jax.tree.map(upd, grads, state, params,
+                            is_leaf=lambda x: isinstance(x, dict)
+                            and ("m" in x))
+        updates = jax.tree.map(lambda o: o[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda o: o[1], flat,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return updates, new_state
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        def per_spec(s):
+            if not isinstance(s, P):
+                return s
+            if len(s) >= 2:
+                return {"m": s, "vr": P(*s[:-1]),
+                        "vc": P(*(s[:-2] + (s[-1],)))}
+            return {"m": s, "v": s}
+
+        return jax.tree.map(per_spec, param_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return Optimizer(init, update, state_specs)

@@ -1,0 +1,2 @@
+from .hw import TPU_V5E  # noqa: F401
+from .analysis import roofline_terms, model_flops  # noqa: F401

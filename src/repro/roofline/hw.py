@@ -1,0 +1,26 @@
+"""Hardware constants for the roofline analysis (assignment-specified)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    hbm_bw: float               # bytes/s per chip
+    ici_link_bw: float          # bytes/s per link
+    ici_links: int              # links per chip (2D torus: 4)
+    hbm_bytes: float            # capacity per chip
+    dci_bw: float               # inter-pod bytes/s per chip (approx)
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 1024**3,
+    dci_bw=6.25e9,
+)

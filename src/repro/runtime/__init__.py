@@ -1,0 +1,3 @@
+from .compression import compressed_grad_sync, int8_compress, int8_decompress  # noqa: F401
+from .straggler import StragglerMonitor  # noqa: F401
+from .supervisor import Supervisor, TrainingFailure  # noqa: F401

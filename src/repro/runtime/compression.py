@@ -1,0 +1,83 @@
+"""Gradient compression for cross-pod reductions.
+
+The inter-pod links (DCI) are an order of magnitude slower than intra-pod
+ICI, so the pod-axis gradient all-reduce is the bandwidth hot spot at
+multi-pod scale. We compress it with per-tensor int8 quantization and
+error feedback: quantization residual is added back into the next step's
+gradient, so the scheme is unbiased in the long run (standard EF-SGD
+argument).
+
+Usage inside a pjit'd step: gradients arrive already summed over the
+mesh's data axis by autodiff; ``compressed_grad_sync`` is applied inside
+a shard_map over the ``pod`` axis to replace the plain psum.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Quantize -> all-reduce int8 (as int32 accumulate) -> dequantize.
+
+    The scale is max-reduced first so all pods share one grid.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    scale = jax.lax.pmax(scale, axis_name)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
+    q_sum = jax.lax.psum(q, axis_name)
+    return q_sum.astype(jnp.float32) * scale
+
+
+def compressed_grad_sync(grads: Any, axis_name: str) -> Any:
+    """Apply compressed_psum leaf-wise (mean over the pod axis)."""
+    n = jax.lax.psum(1, axis_name)
+
+    def sync(g):
+        return (compressed_psum(g, axis_name) / n).astype(g.dtype)
+
+    return jax.tree.map(sync, grads)
+
+
+class ErrorFeedback:
+    """Host-side error-feedback wrapper: carry quantization residuals.
+
+    state = pytree of f32 residuals (same structure as grads).
+    """
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any) -> Tuple[Any, Any]:
+        """Returns (compressed+corrected grads, new residual)."""
+
+        def leaf(g, r):
+            corrected = g.astype(jnp.float32) + r
+            q, scale = int8_compress(corrected)
+            deq = int8_decompress(q, scale)
+            return deq.astype(g.dtype), corrected - deq
+
+        out = jax.tree.map(leaf, grads, residual)
+        comp = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        new_res = jax.tree.map(lambda o: o[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return comp, new_res

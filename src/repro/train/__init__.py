@@ -1,0 +1,1 @@
+from .step import TrainState, make_train_step, loss_fn  # noqa: F401

@@ -1,0 +1,133 @@
+"""Training step: loss, grads, optimizer update, with microbatch gradient
+accumulation, mixed precision (bf16 params/activations, f32 loss and
+optimizer math) and optional int8 error-feedback gradient compression on
+the cross-pod reduction (runtime/compression.py)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+def init_train_state(model, optimizer: Optimizer, rng) -> TrainState:
+    params = model.init_params(rng)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(model, optimizer: Optimizer):
+    from jax.sharding import PartitionSpec as P
+    p_specs = model.param_specs()
+    return TrainState(params=p_specs,
+                      opt=optimizer.state_specs(p_specs), step=P())
+
+
+def loss_fn(model, params, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Sequence-chunked cross entropy: the (B, S, V) logits tensor never
+    materializes (at 150k vocab x 1M tokens it would be hundreds of GiB
+    per device). Hidden states are unembedded chunk-by-chunk under remat.
+    """
+    cfg = model.cfg
+    hidden = model.hidden(params, batch)           # (B, S, D)
+    w = model.unembed(params).astype(cfg.adtype)   # (D, V)
+    labels = batch["labels"]
+    b, s, d = hidden.shape
+    chunk = min(cfg.ce_seq_chunk or s, s)
+    if s % chunk:
+        chunk = s                                  # fallback: one chunk
+
+    n_chunks = s // chunk
+    hc = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def chunk_ce(h, y):
+        logits = (h @ w).astype(jnp.float32)       # (B, chunk, Vpad)
+        if cfg.padded_vocab > cfg.vocab_size:      # mask pad logits
+            v_ids = jnp.arange(cfg.padded_vocab)
+            logits = jnp.where(v_ids[None, None] < cfg.vocab_size,
+                               logits, -1e30)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        mask = (y >= 0).astype(jnp.float32)
+        hits = ((jnp.argmax(logits, -1) == y) * mask).sum()
+        return -(ll * mask).sum(), mask.sum(), hits
+
+    def body(carry, xs):
+        h, y = xs
+        nll, n, hits = jax.checkpoint(chunk_ce)(h, y)
+        return (carry[0] + nll, carry[1] + n, carry[2] + hits), None
+
+    (nll, n, hits), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), (hc, lc))
+    loss = nll / jnp.maximum(n, 1.0)
+    acc = hits / jnp.maximum(n, 1.0)
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def make_train_step(model, optimizer: Optimizer,
+                    microbatches: int = 0,
+                    grad_compression: Optional[str] = None,
+                    pod_axis: Optional[str] = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 splits the batch and accumulates grads via scan
+    (memory/perf knob); grad_compression="int8_ef" compresses the
+    cross-pod gradient reduction with error feedback.
+    """
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState,
+                                                            Dict]:
+        params = state.params
+        if microbatches and microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb_batch):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b_: a + b_, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "accuracy": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(acc_fn, (g0, m0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        if grad_compression == "int8_ef" and pod_axis is not None:
+            from repro.runtime.compression import compressed_grad_sync
+            grads = compressed_grad_sync(grads, pod_axis)
+
+        updates, new_opt = optimizer.update(grads, state.opt, params,
+                                            state.step)
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,76 @@
+"""PPA model calibration (Figs. 8, 10, 13)."""
+import pytest
+
+from repro.core.area import (connection_box_area, interconnect_area,
+                             mux_area, rv_mux_overhead, switch_box_area)
+from repro.core.edsl import SwitchBoxType, create_uniform_interconnect
+
+
+@pytest.fixture(scope="module")
+def paper_baseline():
+    """5 16-bit tracks, PE with 4 in / 2 out (paper §4.1)."""
+    return create_uniform_interconnect(width=8, height=8, num_tracks=5,
+                                       track_width=16, reg_density=1.0)
+
+
+def test_fig8_fifo_ratios(paper_baseline):
+    base = switch_box_area(paper_baseline)
+    full = switch_box_area(paper_baseline, rv="full")
+    split = switch_box_area(paper_baseline, rv="split")
+    assert abs(full / base - 1.54) < 0.03
+    assert abs(split / base - 1.32) < 0.03
+
+
+def test_onehot_join_cheaper_than_lut():
+    """Fig. 5's point: reusing the AOI mux one-hot beats a LUT join."""
+    assert rv_mux_overhead(5, use_lut=True) > 2 * rv_mux_overhead(5)
+
+
+def test_fig10_area_scales_with_tracks():
+    sb, cb = [], []
+    for t in (2, 4, 6, 8):
+        ic = create_uniform_interconnect(width=6, height=6, num_tracks=t,
+                                         reg_density=1.0)
+        sb.append(switch_box_area(ic))
+        cb.append(connection_box_area(ic))
+    assert all(b > a for a, b in zip(sb, sb[1:]))
+    assert all(b > a for a, b in zip(cb, cb[1:]))
+    # near-linear: tripling tracks less than ~3.5x's area
+    assert sb[2] / sb[0] < 3.5 and cb[2] / cb[0] < 3.5
+
+
+def test_fig13_depopulation_shrinks_boxes():
+    full = create_uniform_interconnect(width=6, height=6, num_tracks=5)
+    sb2 = create_uniform_interconnect(width=6, height=6, num_tracks=5,
+                                      sb_sides=2)
+    cb2 = create_uniform_interconnect(width=6, height=6, num_tracks=5,
+                                      cb_sides=2)
+    assert switch_box_area(sb2) < switch_box_area(full)
+    assert connection_box_area(cb2) < connection_box_area(full)
+    # CB shrinks relatively more (paper)
+    sb_drop = 1 - switch_box_area(sb2) / switch_box_area(full)
+    cb_drop = 1 - connection_box_area(cb2) / connection_box_area(full)
+    assert cb_drop > sb_drop
+
+
+def test_topology_area_equal():
+    """Wilton and Disjoint have the same area (§4.2.1)."""
+    a = {}
+    for topo in (SwitchBoxType.WILTON, SwitchBoxType.DISJOINT):
+        ic = create_uniform_interconnect(width=6, height=6, num_tracks=5,
+                                         sb_type=topo)
+        a[topo] = switch_box_area(ic)
+    assert abs(a[SwitchBoxType.WILTON] - a[SwitchBoxType.DISJOINT]) < 1e-9
+
+
+def test_whole_array_accounting(paper_baseline):
+    tot = interconnect_area(paper_baseline)
+    assert tot["total"] == pytest.approx(tot["sb"] + tot["cb"]
+                                         + tot["fifo"])
+    assert tot["total"] > 64 * 1000      # 8x8 tiles, ~1.4k um2 SB each
+
+
+def test_mux_area_monotone():
+    assert mux_area(2, 16) < mux_area(4, 16) < mux_area(8, 16)
+    assert mux_area(4, 1) < mux_area(4, 16)
+    assert mux_area(1, 16) == 0.0

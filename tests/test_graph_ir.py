@@ -1,0 +1,106 @@
+"""Graph IR + eDSL unit/property tests (Canal §3.1–3.2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.edsl import (SB_TOPOLOGIES, SwitchBoxType,
+                             create_uniform_interconnect, sides_for)
+from repro.core.graph import IO, NodeKind, Side
+from repro.core.tiles import PECore
+
+
+@given(st.integers(2, 10),
+       st.sampled_from(list(SwitchBoxType)))
+@settings(max_examples=20, deadline=None)
+def test_topology_is_permutation(num_tracks, topo):
+    """Every (from_side, to_side) pair maps tracks bijectively — this is
+    what makes Wilton and Disjoint equal-area (paper §4.2.1)."""
+    conns = SB_TOPOLOGIES[topo](num_tracks)
+    by_pair = {}
+    for (t_from, s_from, t_to, s_to) in conns:
+        by_pair.setdefault((s_from, s_to), []).append((t_from, t_to))
+    for (s_from, s_to), pairs in by_pair.items():
+        assert s_from != s_to
+        froms = sorted(t for t, _ in pairs)
+        tos = sorted(t for _, t in pairs)
+        assert froms == list(range(num_tracks))
+        assert tos == list(range(num_tracks))
+
+
+@given(st.integers(2, 6))
+@settings(max_examples=10, deadline=None)
+def test_disjoint_keeps_track(num_tracks):
+    for (t_from, _, t_to, _) in SB_TOPOLOGIES[SwitchBoxType.DISJOINT](
+            num_tracks):
+        assert t_from == t_to
+
+
+def test_uniform_interconnect_structure():
+    ic = create_uniform_interconnect(width=4, height=3, num_tracks=2,
+                                     sb_type="wilton", reg_density=0.0)
+    g = ic.graph(16)
+    assert g.dims() == (4, 3)
+    # interior SB_OUT fan-in: 3 topology edges + 2 core outputs (4 sides)
+    sb = g.get_sb(1, 1, Side.NORTH, 0, IO.SB_OUT)
+    assert len(sb.fan_in) == 5
+    # edges between tiles: east out of (1,1) feeds west in of (2,1)
+    out = g.get_sb(1, 1, Side.EAST, 0, IO.SB_OUT)
+    nbr = g.get_sb(2, 1, Side.WEST, 0, IO.SB_IN)
+    assert nbr in out.fan_out
+
+
+def test_register_insertion_density():
+    full = create_uniform_interconnect(width=4, height=4, num_tracks=2,
+                                       reg_density=1.0)
+    none = create_uniform_interconnect(width=4, height=4, num_tracks=2,
+                                       reg_density=0.0)
+    half = create_uniform_interconnect(width=4, height=4, num_tracks=2,
+                                       reg_density=0.5)
+    n_full = len(full.graph(16).registers)
+    n_none = len(none.graph(16).registers)
+    n_half = len(half.graph(16).registers)
+    assert n_none == 0
+    assert 0 < n_half < n_full
+
+
+def test_side_reduction_order():
+    # Fig. 12: 4 sides -> drop EAST -> drop SOUTH
+    assert Side.EAST not in sides_for(3)
+    assert Side.SOUTH not in sides_for(2)
+    assert set(sides_for(4)) == set(Side)
+
+
+def test_port_connection_depopulation():
+    ic4 = create_uniform_interconnect(width=4, height=4, num_tracks=3,
+                                      cb_sides=4)
+    ic2 = create_uniform_interconnect(width=4, height=4, num_tracks=3,
+                                      cb_sides=2)
+    p4 = ic4.graph(16).get_port(1, 1, "data0")
+    p2 = ic2.graph(16).get_port(1, 1, "data0")
+    assert len(p4.fan_in) == 4 * 3
+    assert len(p2.fan_in) == 2 * 3
+
+
+def test_track_fc():
+    ic = create_uniform_interconnect(width=4, height=4, num_tracks=4,
+                                     cb_track_fc=0.5, sb_track_fc=0.5)
+    p = ic.graph(16).get_port(1, 1, "data0")
+    assert len(p.fan_in) == 4 * 2          # half the tracks, 4 sides
+
+
+def test_width_mismatch_rejected():
+    from repro.core.graph import PortNode
+    a = PortNode("a", 0, 0, 16)
+    b = PortNode("b", 0, 0, 1)
+    with pytest.raises(ValueError):
+        a.add_edge(b)
+
+
+def test_low_level_edsl():
+    """Paper Fig. 4 top: manual node creation + wiring."""
+    from repro.core.edsl import make_sb_node
+    from repro.core.graph import PortNode
+    node = make_sb_node(x=1, y=1, side="south", track=1)
+    ports = [PortNode(f"data{i}", 1, 1, 16) for i in range(4)]
+    for p in ports:
+        node.add_edge(p)
+    assert all(node in p.fan_in for p in ports)

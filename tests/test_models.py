@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+and one serve path on CPU, asserting shapes + finiteness (assignment
+requirement), plus prefill/decode vs full-forward consistency."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke, input_specs, list_archs, SHAPES
+from repro.models import build_model
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(3, min(200, cfg.vocab_size - 1), (b, s))
+        .astype(np.int32))}
+    batch["labels"] = jnp.asarray(
+        rng.integers(3, min(200, cfg.vocab_size - 1), (b, s))
+        .astype(np.int32))
+    if cfg.vlm is not None:
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((b, cfg.vlm.num_patches, cfg.vlm.d_patch))
+            .astype(np.float32) * 0.1).astype(jnp.bfloat16)
+    if cfg.encdec is not None:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.encdec.encoder_seq,
+                                 cfg.encdec.d_frame))
+            .astype(np.float32) * 0.1).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_smoke(arch).replace(moe_groups=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    logits = model.logits(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_smoke(arch):
+    cfg = get_smoke(arch).replace(moe_groups=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, s=8)
+    batch.pop("labels")
+    cache = model.init_cache(2, 64)
+    logits, cache = model.prefill(params, cache, batch)
+    assert logits.shape[0] == 2 and logits.shape[1] == 1
+    l2, cache = model.decode_step(
+        params, cache, {"tokens": jnp.ones((2, 1), jnp.int32)})
+    assert bool(jnp.isfinite(logits).all() and jnp.isfinite(l2).all())
+    assert int(cache["index"]) >= 9
+
+
+@pytest.mark.parametrize("arch", ["tinyllama_1_1b", "qwen3_14b",
+                                  "mamba2_1_3b"])
+def test_prefill_decode_matches_full_forward(arch):
+    """Teacher forcing: decode token-by-token must equal the full causal
+    forward (cache correctness)."""
+    cfg = get_smoke(arch).replace(moe_groups=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    b, s = 2, 8
+    batch = make_batch(cfg, b=b, s=s, seed=3)
+    batch.pop("labels")
+    full = model.logits(params, batch)              # (B, S, V)
+
+    cache = model.init_cache(b, 32)
+    lp, cache = model.prefill(params, cache,
+                              {"tokens": batch["tokens"][:, :4]})
+    np.testing.assert_allclose(np.asarray(lp[:, 0]),
+                               np.asarray(full[:, 3]), atol=2e-2,
+                               rtol=2e-2)
+    for t in range(4, s):
+        ld, cache = model.decode_step(
+            params, cache, {"tokens": batch["tokens"][:, t:t + 1]})
+        np.testing.assert_allclose(np.asarray(ld[:, 0]),
+                                   np.asarray(full[:, t]), atol=2e-2,
+                                   rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_configs_match_assignment(arch):
+    """The FULL configs carry the exact published numbers."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    expected = {
+        "tinyllama_1_1b": (22, 2048, 32, 4, 5632, 32000),
+        "phi3_mini_3_8b": (32, 3072, 32, 32, 8192, 32064),
+        "deepseek_coder_33b": (62, 7168, 56, 8, 19200, 32256),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "kimi_k2_1t_a32b": (61, 7168, 64, 8, 18432, 163840),
+        "granite_moe_3b_a800m": (32, 1536, 24, 8, 512, 49155),
+        "internvl2_2b": (24, 2048, 16, 8, 8192, 92553),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+        "whisper_medium": (24, 1024, 16, 16, 4096, 51865),
+        "mamba2_1_3b": (48, 2048, 0, 0, 0, 50280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.kv_heads,
+           cfg.d_ff if cfg.moe is None or arch == "kimi_k2_1t_a32b"
+           else cfg.moe.d_ff_expert, cfg.vocab_size)
+    if arch == "granite_moe_3b_a800m":
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.kv_heads,
+               cfg.moe.d_ff_expert, cfg.vocab_size)
+    assert got == expected
+    if arch == "kimi_k2_1t_a32b":
+        assert cfg.moe.num_experts == 384 and cfg.moe.top_k == 8
+        assert cfg.moe.d_ff_expert == 2048
+    if arch == "granite_moe_3b_a800m":
+        assert cfg.moe.num_experts == 40 and cfg.moe.top_k == 8
+    if arch == "mamba2_1_3b":
+        assert cfg.ssm.state_dim == 128
+    if arch == "qwen3_14b":
+        assert cfg.qk_norm
+
+
+def test_long_500k_applicability():
+    from repro.configs import cell_is_runnable, get_config
+    runnable = [a for a in ARCHS
+                if cell_is_runnable(get_config(a), SHAPES["long_500k"])]
+    assert sorted(runnable) == ["mamba2_1_3b", "recurrentgemma_2b"]
+
+
+def test_input_specs_shapes():
+    from repro.configs import get_config
+    cfg = get_config("internvl2_2b")
+    sp = input_specs(cfg, SHAPES["train_4k"])
+    assert sp["tokens"].shape == (256, 4096)
+    assert sp["patches"].shape == (256, 256, 1024)
+    sp = input_specs(cfg, SHAPES["decode_32k"])
+    assert sp["tokens"].shape == (128, 1)
+    cfg_w = get_config("whisper_medium")
+    sp = input_specs(cfg_w, SHAPES["prefill_32k"])
+    assert sp["frames"].shape == (32, 1500, 128)

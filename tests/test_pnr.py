@@ -1,0 +1,91 @@
+"""PnR pipeline: packing, placement, routing, timing (§3.4)."""
+import numpy as np
+import pytest
+
+from repro.core.edsl import SwitchBoxType, create_uniform_interconnect
+from repro.core.pnr import place_and_route
+from repro.core.pnr.app import (BENCH_APPS, app_butterfly, app_fir,
+                                app_pointwise, app_tree_reduce)
+from repro.core.pnr.global_place import assign_ios, global_place, legalize
+from repro.core.pnr.packing import pack
+from repro.core.pnr.route import RoutingError
+
+
+@pytest.fixture(scope="module")
+def ic():
+    return create_uniform_interconnect(width=6, height=6, num_tracks=4,
+                                       sb_type="wilton", io_ring=True,
+                                       reg_density=1.0)
+
+
+def test_packing_folds_constants_and_registers():
+    packed = pack(app_fir(4))
+    # every const feeding one PE input is folded
+    assert all(i.kind != "const" for i in packed.placeable.values())
+    assert packed.const_ports          # PE immediates recorded
+    # the tail register of the delay line is absorbed into its PE
+    assert packed.reg_ports
+    # fan-out nets were merged per driver port
+    seen = set()
+    for net in packed.nets:
+        assert net.src not in seen
+        seen.add(net.src)
+
+
+def test_global_place_and_legalize(ic):
+    packed = pack(app_tree_reduce(8))
+    fixed = assign_ios(packed, 6, 6)
+    pos = global_place(packed, 6, 6, fixed=fixed)
+    pl = legalize(packed, pos, 6, 6, io_ring=True, fixed=fixed)
+    assert len(set(pl.values())) == len(pl)        # no overlaps
+    for name, inst in packed.placeable.items():
+        x, y = pl[name]
+        border = x in (0, 5) or y in (0, 5)
+        if inst.kind.startswith("io"):
+            assert border
+        else:
+            assert not border
+
+
+@pytest.mark.parametrize("app_name", ["pointwise", "tree_reduce", "fir",
+                                      "butterfly"])
+def test_apps_route_on_wilton(ic, app_name):
+    r = place_and_route(ic, BENCH_APPS[app_name](), alphas=(2.0,),
+                        sa_steps=40, sa_batch=8)
+    assert r.success, r.error
+    assert r.timing["critical_path_ns"] > 0
+    assert r.wirelength > 0
+
+
+def test_disjoint_fails_under_track_pressure():
+    """§4.2.1: Disjoint cannot re-permute tracks at turns; with Fc=0.5
+    endpoints it fails where Wilton routes."""
+    results = {}
+    for topo in (SwitchBoxType.WILTON, SwitchBoxType.DISJOINT):
+        icx = create_uniform_interconnect(
+            width=8, height=8, num_tracks=4, sb_type=topo, io_ring=True,
+            reg_density=1.0, cb_track_fc=0.5, sb_track_fc=0.5)
+        r = place_and_route(icx, app_butterfly(3), alphas=(2.0,),
+                            sa_steps=60, sa_batch=8, route_iters=25)
+        results[topo.value] = r.success
+    assert results["wilton"] and not results["disjoint"]
+
+
+def test_route_result_is_legal(ic):
+    """No IR node carries two different nets (capacity 1)."""
+    r = place_and_route(ic, app_tree_reduce(8), alphas=(2.0,),
+                        sa_steps=40, sa_batch=8)
+    assert r.success
+    usage = {}
+    for net in r.routing.nets:
+        for nid in net.nodes_used():
+            usage.setdefault(nid, set()).add(net.name)
+    shared = {n: v for n, v in usage.items() if len(v) > 1}
+    assert not shared
+
+
+def test_alpha_sweep_picks_best(ic):
+    r = place_and_route(ic, BENCH_APPS["fir"](), alphas=(1.0, 2.0, 4.0),
+                        sa_steps=30, sa_batch=8)
+    assert r.success
+    assert r.alpha in (1.0, 2.0, 4.0)

@@ -1,0 +1,87 @@
+"""Render the §Dry-run and §Roofline markdown tables from the dry-run
+JSON artifacts into EXPERIMENTS.generated.md fragments (pasted into
+EXPERIMENTS.md by the build notes)."""
+import glob
+import json
+import os
+import sys
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "dryrun")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.ici import pod_collective_model  # noqa: E402
+
+
+def cells(mesh):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRY, mesh, "*", "*.json"))):
+        rec = json.load(open(p))
+        out.append(rec)
+    return out
+
+
+def fmt(x, n=4):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x:.1e}"
+    return f"{x:.{n}f}"
+
+
+def main():
+    lines = []
+    lines.append("### Single-pod (16x16 = 256 chips) baseline roofline\n")
+    lines.append("| arch | shape | compute (s) | memory (s) | "
+                 "collective (s) | dominant | roofline frac | "
+                 "useful FLOPs | ICI cong. | note |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    base = [r for r in cells("single") if not r.get("tag")]
+    tags = [r for r in cells("single") if r.get("tag")]
+    for r in sorted(base, key=lambda r: (r["arch"], r["shape"])):
+        t = r["roofline"]
+        ici = pod_collective_model(r["collectives"]["by_kind_traffic"],
+                                   r["mesh_axes"])
+        note = ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(t['compute_s'])} | "
+            f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s', '')} | "
+            f"{t['roofline_fraction']:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{ici['congestion_factor']:.2f} | {note} |")
+    lines.append("\n### Multi-pod (2x16x16 = 512 chips) — pod axis "
+                 "shards\n")
+    lines.append("| arch | shape | compute (s) | memory (s) | "
+                 "collective (s) | dominant |")
+    lines.append("|---|---|---|---|---|---|")
+    for r in sorted(cells("multi"), key=lambda r: (r["arch"],
+                                                   r["shape"])):
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(t['compute_s'])} | "
+            f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s', '')} |")
+    lines.append("\n### Tagged perf variants (single-pod)\n")
+    lines.append("| arch | shape | tag | compute (s) | memory (s) | "
+                 "collective (s) | useful |")
+    lines.append("|---|---|---|---|---|---|---|")
+    for r in sorted(tags, key=lambda r: (r["arch"], r["shape"],
+                                         r["tag"])):
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['tag']} | "
+            f"{fmt(t['compute_s'])} | {fmt(t['memory_s'])} | "
+            f"{fmt(t['collective_s'])} | "
+            f"{r['useful_flops_ratio']:.2f} |")
+    out = "\n".join(lines)
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "roofline_tables.md")
+    with open(path, "w") as f:
+        f.write(out)
+    print(out[:2000])
+    print(f"... written to {path}")
+
+
+if __name__ == "__main__":
+    main()
