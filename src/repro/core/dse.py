@@ -4,11 +4,22 @@ One function per DSE axis from the paper: switch-box topology, number of
 routing tracks, and SB/CB core-port connections — plus the FIFO study of
 §4.1. Each returns a list of records consumed by the figure benchmarks and
 the tests.
+
+All sweeps run on a shared :class:`SweepExecutor`, the bulk-evaluation
+engine behind the paper's "fast design space exploration" claim: it caches
+``RoutingResources``/``FabricModule`` per interconnect, evaluates
+independent design points concurrently, and emulates every routed app of a
+design point as one batched ``FabricModule.run_batch`` scan (the batched
+Pallas sweep kernel when ``use_pallas=True``).
 """
 from __future__ import annotations
 
+import json
+import os
+import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .area import connection_box_area, switch_box_area
 from .edsl import SwitchBoxType, create_uniform_interconnect
@@ -16,25 +27,189 @@ from .pnr import place_and_route
 from .pnr.app import BENCH_APPS
 
 
-def _run_apps(ic, apps: Dict[str, Callable], sa_steps: int = 60,
-              sa_batch: int = 16, alphas=(2.0,),
-              split_fifo_ctrl_delay: float = 0.0) -> Dict[str, Dict]:
-    out: Dict[str, Dict] = {}
-    from .pnr.route import RoutingResources
-    res = RoutingResources(ic)
-    for name, mk in apps.items():
-        r = place_and_route(ic, mk(), alphas=alphas, sa_steps=sa_steps,
-                            sa_batch=sa_batch, resources=res,
-                            split_fifo_ctrl_delay=split_fifo_ctrl_delay)
-        out[name] = {
-            "success": r.success,
-            "critical_path_ns": r.timing.get("critical_path_ns", float("inf")),
-            "wirelength": r.wirelength,
-            "route_iterations": r.route_iterations,
-            "seconds": r.seconds,
-            "error": r.error,
-        }
-    return out
+class SweepExecutor:
+    """Reusable bulk design-point evaluator.
+
+    One executor serves many sweeps: per-interconnect caches are shared
+    across design points (``RoutingResources`` for the router,
+    ``FabricModule`` for emulation), independent points run concurrently on
+    a thread pool (JAX releases the GIL during device compute), and all
+    routed apps of a point are emulated as a single batch. Records
+    accumulate on the executor and can be persisted as JSON for
+    ``benchmarks/run.py``.
+    """
+
+    def __init__(self, apps: Optional[Dict[str, Callable]] = None,
+                 sa_steps: int = 60, sa_batch: int = 16,
+                 alphas: Sequence[float] = (2.0,),
+                 split_fifo_ctrl_delay: float = 0.0,
+                 max_workers: Optional[int] = None,
+                 emulate_cycles: int = 0, use_pallas: bool = True,
+                 seed: int = 0):
+        self.apps = apps or BENCH_APPS
+        self.sa_steps = sa_steps
+        self.sa_batch = sa_batch
+        self.alphas = tuple(alphas)
+        self.split_fifo_ctrl_delay = split_fifo_ctrl_delay
+        self.max_workers = max_workers
+        self.emulate_cycles = emulate_cycles
+        self.use_pallas = use_pallas
+        self.seed = seed
+        self._lock = threading.Lock()
+        self._ic_cache: Dict[Tuple, Any] = {}
+        self._res_cache: Dict[Tuple, Any] = {}
+        self._fab_cache: Dict[Tuple, Any] = {}
+        self.records: List[Dict] = []
+
+    # ------------------------------------------------------------- caches
+    @staticmethod
+    def _key(kwargs: Dict) -> Tuple:
+        return tuple(sorted((k, str(v)) for k, v in kwargs.items()))
+
+    def interconnect(self, **ic_kwargs):
+        key = self._key(ic_kwargs)
+        with self._lock:
+            ic = self._ic_cache.get(key)
+        if ic is None:
+            ic = create_uniform_interconnect(**ic_kwargs)
+            with self._lock:
+                ic = self._ic_cache.setdefault(key, ic)
+        return ic
+
+    def resources(self, ic, key: Tuple):
+        from .pnr.route import RoutingResources
+        with self._lock:
+            res = self._res_cache.get(key)
+        if res is None:
+            res = RoutingResources(ic)
+            with self._lock:
+                res = self._res_cache.setdefault(key, res)
+        return res
+
+    def fabric(self, ic, key: Tuple):
+        from .lowering import compile_interconnect
+        with self._lock:
+            fab = self._fab_cache.get(key)
+        if fab is None:
+            fab = compile_interconnect(ic, use_pallas=self.use_pallas)
+            with self._lock:
+                fab = self._fab_cache.setdefault(key, fab)
+        return fab
+
+    # ----------------------------------------------------- point execution
+    def _emulate_batch(self, fab, routed: List[Tuple[str, Any, Any]]
+                      ) -> Dict[str, Dict]:
+        """Emulate all routed apps of one design point as a single batch.
+
+        ``routed``: (name, packed, PnRResult) triples on ``fab``. Drives a
+        common counter stimulus on every app input and records the output
+        checksum — the bulk validation pass of the batched DSE engine.
+        """
+        import numpy as np
+        from repro.fabric import AppEmulator, run_apps_batch
+
+        emulators, inputs, names = [], [], []
+        T = self.emulate_cycles
+        for name, packed, result in routed:
+            emu = AppEmulator.from_pnr(fab, packed, result)
+            ins = {}
+            for inst_name, inst in packed.placeable.items():
+                if inst.kind == "io_in":
+                    coord = result.placement[inst_name]
+                    ins[coord] = np.arange(1, T + 1, dtype=np.int32)
+            emulators.append(emu)
+            inputs.append(ins)
+            names.append(name)
+        outs = run_apps_batch(emulators, inputs, T)
+        report: Dict[str, Dict] = {}
+        for name, emu, out in zip(names, emulators, outs):
+            checksum = int(sum(int(np.asarray(v, np.int64).sum())
+                               for v in out.values()) & 0xFFFFFFFF)
+            report[name] = {"depth": emu.depth, "cycles": T,
+                            "out_checksum": checksum}
+        return report
+
+    def run_point(self, ic_kwargs: Dict,
+                  extra: Optional[Dict] = None) -> Dict:
+        """PnR every app on one design point; emit a sweep record."""
+        t0 = time.perf_counter()
+        ic = self.interconnect(**ic_kwargs)
+        key = self._key(ic_kwargs)
+        res = self.resources(ic, key)
+        out: Dict[str, Dict] = {}
+        routed: List[Tuple[str, Any, Any]] = []
+        for name, mk in self.apps.items():
+            app = mk()
+            r = place_and_route(
+                ic, app, alphas=self.alphas, sa_steps=self.sa_steps,
+                sa_batch=self.sa_batch, resources=res, seed=self.seed,
+                split_fifo_ctrl_delay=self.split_fifo_ctrl_delay)
+            out[name] = {
+                "success": r.success,
+                "critical_path_ns": r.timing.get("critical_path_ns",
+                                                 float("inf")),
+                "wirelength": r.wirelength,
+                "route_iterations": r.route_iterations,
+                "seconds": r.seconds,
+                "error": r.error,
+            }
+            if r.success and self.emulate_cycles:
+                routed.append((name, r.packed, r))
+        rec: Dict = dict(extra or {})
+        rec["apps"] = out
+        rec["sb_area"] = switch_box_area(ic)
+        rec["cb_area"] = connection_box_area(ic)
+        if routed:
+            fab = self.fabric(ic, key)
+            emu = self._emulate_batch(fab, routed)
+            for name, info in emu.items():
+                out[name]["emulation"] = info
+        # wall time includes interconnect generation (cache misses pay it,
+        # cache hits legitimately report the shared-cache speedup)
+        rec["gen_pnr_seconds"] = time.perf_counter() - t0
+        return rec
+
+    def run_points(self, points: Sequence[Tuple[Dict, Dict]]) -> List[Dict]:
+        """Evaluate (ic_kwargs, extra) design points, concurrently when the
+        pool has more than one worker. Order of records matches ``points``.
+        """
+        workers = self.max_workers
+        if workers is None:
+            workers = min(len(points), os.cpu_count() or 1, 4)
+        if workers <= 1 or len(points) <= 1:
+            recs = [self.run_point(kw, extra) for kw, extra in points]
+        else:
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                futs = [pool.submit(self.run_point, kw, extra)
+                        for kw, extra in points]
+                recs = [f.result() for f in futs]
+        self.records.extend(recs)
+        return recs
+
+    def save_json(self, path: str) -> str:
+        """Persist accumulated records (consumed by benchmarks/run.py)."""
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.records, f, indent=2, default=str)
+        return path
+
+
+def _executor_for(executor: Optional[SweepExecutor],
+                  apps: Optional[Dict[str, Callable]],
+                  sa_steps: Optional[int]) -> SweepExecutor:
+    """Shared-executor plumbing for the sweep functions: a passed executor
+    carries its own apps/sa_steps, so per-call overrides would be silently
+    dropped — reject the ambiguous combination instead."""
+    if executor is not None:
+        if apps is not None or sa_steps is not None:
+            raise ValueError(
+                "pass apps/sa_steps on the SweepExecutor, not alongside it")
+        return executor
+    if sa_steps is None:
+        return SweepExecutor(apps=apps)
+    return SweepExecutor(apps=apps, sa_steps=sa_steps)
 
 
 def fifo_area_study(num_tracks: int = 5, track_width: int = 16
@@ -57,57 +232,39 @@ def fifo_area_study(num_tracks: int = 5, track_width: int = 16
 def sweep_num_tracks(tracks: Sequence[int] = (2, 3, 4, 5, 6),
                      apps: Optional[Dict[str, Callable]] = None,
                      width: int = 8, height: int = 8,
-                     sa_steps: int = 60, track_fc: float = 1.0
+                     sa_steps: Optional[int] = None, track_fc: float = 1.0,
+                     executor: Optional[SweepExecutor] = None
                      ) -> List[Dict]:
     """§4.2.1 / Figs. 10–11: SB/CB area and application runtime vs tracks."""
-    apps = apps or BENCH_APPS
-    recs = []
-    for t in tracks:
-        ic = create_uniform_interconnect(width=width, height=height,
-                                         num_tracks=t, io_ring=True,
-                                         sb_type=SwitchBoxType.WILTON,
-                                         reg_density=1.0,
-                                         cb_track_fc=track_fc,
-                                         sb_track_fc=track_fc)
-        t0 = time.perf_counter()
-        results = _run_apps(ic, apps, sa_steps=sa_steps)
-        recs.append({
-            "num_tracks": t,
-            "sb_area": switch_box_area(ic),
-            "cb_area": connection_box_area(ic),
-            "apps": results,
-            "gen_pnr_seconds": time.perf_counter() - t0,
-        })
-    return recs
+    ex = _executor_for(executor, apps, sa_steps)
+    points = [(dict(width=width, height=height, num_tracks=t, io_ring=True,
+                    sb_type=SwitchBoxType.WILTON, reg_density=1.0,
+                    cb_track_fc=track_fc, sb_track_fc=track_fc),
+               {"num_tracks": t}) for t in tracks]
+    return ex.run_points(points)
 
 
 def sweep_sb_topology(topologies: Sequence[SwitchBoxType] = (
         SwitchBoxType.WILTON, SwitchBoxType.DISJOINT, SwitchBoxType.IMRAN),
         apps: Optional[Dict[str, Callable]] = None,
         num_tracks: int = 4, width: int = 8, height: int = 8,
-        sa_steps: int = 60, track_fc: float = 0.5) -> List[Dict]:
+        sa_steps: Optional[int] = None, track_fc: float = 0.5,
+        executor: Optional[SweepExecutor] = None) -> List[Dict]:
     """§4.2.1 / Fig. 9: topology routability (Wilton routes, Disjoint
     fails). track_fc < 1 reflects depopulated core-port track connections:
     a route is then pinned to its starting track *class*, which Disjoint
     can never leave (its fatal restriction) while Wilton re-permutes
     tracks at every turn."""
-    apps = apps or BENCH_APPS
-    recs = []
-    for topo in topologies:
-        ic = create_uniform_interconnect(width=width, height=height,
-                                         num_tracks=num_tracks, io_ring=True,
-                                         sb_type=topo, reg_density=1.0,
-                                         cb_track_fc=track_fc,
-                                         sb_track_fc=track_fc)
-        results = _run_apps(ic, apps, sa_steps=sa_steps)
-        n_ok = sum(1 for r in results.values() if r["success"])
-        recs.append({
-            "topology": topo.value,
-            "sb_area": switch_box_area(ic),
-            "apps": results,
-            "n_routed": n_ok,
-            "n_apps": len(results),
-        })
+    ex = _executor_for(executor, apps, sa_steps)
+    points = [(dict(width=width, height=height, num_tracks=num_tracks,
+                    io_ring=True, sb_type=topo, reg_density=1.0,
+                    cb_track_fc=track_fc, sb_track_fc=track_fc),
+               {"topology": topo.value}) for topo in topologies]
+    recs = ex.run_points(points)
+    for rec in recs:
+        rec["n_routed"] = sum(1 for r in rec["apps"].values()
+                              if r["success"])
+        rec["n_apps"] = len(rec["apps"])
     return recs
 
 
@@ -115,29 +272,23 @@ def sweep_port_connections(kind: str,
                            sides: Sequence[int] = (4, 3, 2),
                            apps: Optional[Dict[str, Callable]] = None,
                            num_tracks: int = 5, width: int = 8,
-                           height: int = 8, sa_steps: int = 60
+                           height: int = 8, sa_steps: Optional[int] = None,
+                           executor: Optional[SweepExecutor] = None
                            ) -> List[Dict]:
     """§4.2.2 / Figs. 12–15: depopulate SB (core-output) or CB (core-input)
     side connections and measure area + runtime."""
     if kind not in ("sb", "cb"):
         raise ValueError("kind must be 'sb' or 'cb'")
-    apps = apps or BENCH_APPS
-    recs = []
+    ex = _executor_for(executor, apps, sa_steps)
+    points = []
     for n_sides in sides:
         kw = {"sb_sides": n_sides} if kind == "sb" else {"cb_sides": n_sides}
-        ic = create_uniform_interconnect(width=width, height=height,
-                                         num_tracks=num_tracks, io_ring=True,
-                                         sb_type=SwitchBoxType.WILTON,
-                                         reg_density=1.0, **kw)
-        results = _run_apps(ic, apps, sa_steps=sa_steps)
-        recs.append({
-            "kind": kind,
-            "sides": n_sides,
-            "sb_area": switch_box_area(ic),
-            "cb_area": connection_box_area(ic),
-            "apps": results,
-        })
-    return recs
+        points.append((dict(width=width, height=height,
+                            num_tracks=num_tracks, io_ring=True,
+                            sb_type=SwitchBoxType.WILTON,
+                            reg_density=1.0, **kw),
+                       {"kind": kind, "sides": n_sides}))
+    return ex.run_points(points)
 
 
 def generation_speed(sizes: Sequence[int] = (4, 8, 16, 32)) -> List[Dict]:
@@ -155,3 +306,50 @@ def generation_speed(sizes: Sequence[int] = (4, 8, 16, 32)) -> List[Dict]:
         recs.append({"size": s, "nodes": fab.arrays.num_nodes,
                      "gen_seconds": t1 - t0, "lower_seconds": t2 - t1})
     return recs
+
+
+def batched_vs_serial_emulation(width: int = 6, height: int = 6,
+                                num_tracks: int = 4, batch: int = 8,
+                                cycles: int = 16, use_pallas: bool = True,
+                                seed: int = 0) -> Dict:
+    """Micro-DSE: emulate B random fabric configurations serially
+    (``run`` per config) vs as one batch (``run_batch``). Returns wall
+    clocks and asserts bit-identical observations — the engine behind
+    ``benchmarks/dse_speed.py``'s batched-vs-serial comparison."""
+    import numpy as np
+    import jax.numpy as jnp
+    from .lowering import compile_interconnect
+
+    ic = create_uniform_interconnect(width=width, height=height,
+                                     num_tracks=num_tracks, io_ring=True,
+                                     sb_type=SwitchBoxType.WILTON,
+                                     reg_density=1.0)
+    fab = compile_interconnect(ic, use_pallas=use_pallas)
+    rng = np.random.default_rng(seed)
+    cfgs = rng.integers(0, 4, (batch, fab.num_config)).astype(np.int32)
+    ext = rng.integers(0, 256, (batch, cycles, fab.num_io)).astype(np.int32)
+    depth = max(fab.combinational_depth(c) for c in cfgs)
+
+    # warm both paths once so neither timed region is dominated by one-off
+    # JIT/Pallas compilation (the comparison is dispatch cost, not compile)
+    fab.run(jnp.asarray(cfgs[0]), jnp.asarray(ext[0, :2]), depth=depth)
+    fab.run_batch(jnp.asarray(cfgs), jnp.asarray(ext[:, :2]), depth=depth)
+
+    t0 = time.perf_counter()
+    serial = np.stack([
+        np.asarray(fab.run(jnp.asarray(cfgs[b]), jnp.asarray(ext[b]),
+                           depth=depth))
+        for b in range(batch)])
+    serial_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    batched = np.asarray(fab.run_batch(jnp.asarray(cfgs),
+                                       jnp.asarray(ext), depth=depth))
+    batched_s = time.perf_counter() - t0
+
+    if not np.array_equal(serial, batched):
+        raise AssertionError("batched emulation diverged from serial")
+    return {"batch": batch, "cycles": cycles, "nodes": fab.arrays.num_nodes,
+            "depth": depth, "use_pallas": use_pallas,
+            "serial_seconds": serial_s, "batched_seconds": batched_s,
+            "speedup": serial_s / max(batched_s, 1e-9)}

@@ -191,6 +191,15 @@ class FabricModule:
             "mem": jnp.zeros(max(self.num_mem, 1), dtype=jnp.int32),
         }
 
+    def init_state_batch(self, batch: int) -> Dict[str, jnp.ndarray]:
+        """State for ``batch`` independent configurations (leading B dim)."""
+        return {
+            "regs": jnp.zeros((batch, len(self.arrays.reg_ids)),
+                              dtype=jnp.int32),
+            "mem": jnp.zeros((batch, max(self.num_mem, 1)),
+                             dtype=jnp.int32),
+        }
+
     def default_pe_cfg(self) -> Dict[str, jnp.ndarray]:
         n = max(self.num_pe, 1)
         return {
@@ -200,6 +209,11 @@ class FabricModule:
             "imm_mask": jnp.zeros((n, 4), dtype=jnp.int32),
             "imm_val": jnp.zeros((n, 4), dtype=jnp.int32),
         }
+
+    def default_pe_cfg_batch(self, batch: int) -> Dict[str, jnp.ndarray]:
+        one = self.default_pe_cfg()
+        return {k: jnp.broadcast_to(v, (batch,) + v.shape)
+                for k, v in one.items()}
 
     # ------------------------------------------------------------- evaluation
     def _selects(self, config: jnp.ndarray) -> jnp.ndarray:
@@ -228,6 +242,29 @@ class FabricModule:
             new = vals_ext[src_sel]
         keep = jnp.asarray(~a.is_driven)
         return jnp.where(keep, vals_ext[:-1], new) \
+                  .astype(jnp.int32)
+
+    def _sweep_batch(self, vals_ext: jnp.ndarray,
+                     sel: jnp.ndarray) -> jnp.ndarray:
+        """Batched sweep: vals_ext (B, N+1), sel (B, N) -> (B, N).
+
+        With ``use_pallas`` the batched kernel vectorizes over the
+        configuration axis (bitstream-major layout); otherwise the single
+        sweep is vmapped."""
+        a = self.arrays
+        src = jnp.asarray(a.src)
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            new = kops.fabric_sweep_batch(vals_ext, src, sel)
+        else:
+            def one(v_ext, s):
+                src_sel = jnp.take_along_axis(src, s[:, None],
+                                              axis=1)[:, 0]
+                return v_ext[src_sel]
+
+            new = jax.vmap(one)(vals_ext, sel)
+        keep = jnp.asarray(~a.is_driven)
+        return jnp.where(keep[None, :], vals_ext[:, :-1], new) \
                   .astype(jnp.int32)
 
     def _eval_pes(self, vals: jnp.ndarray,
@@ -315,8 +352,13 @@ class FabricModule:
 
     def run(self, config: jnp.ndarray, ext_stream: jnp.ndarray,
             pe_cfg: Optional[Dict[str, jnp.ndarray]] = None,
-            depth: int = 16) -> jnp.ndarray:
-        """Run T cycles; ext_stream (T, num_io) -> observations (T, num_io)."""
+            depth: Optional[int] = None) -> jnp.ndarray:
+        """Run T cycles; ext_stream (T, num_io) -> observations (T, num_io).
+
+        ``depth=None`` computes the per-config combinational depth from the
+        configured network (host-side; requires a concrete config)."""
+        if depth is None:
+            depth = self.combinational_depth(np.asarray(config))
         state = self.init_state()
 
         def scan_fn(st, x):
@@ -325,6 +367,197 @@ class FabricModule:
 
         _, out = jax.lax.scan(scan_fn, state, ext_stream)
         return out
+
+    def step_batch(self, state: Dict[str, jnp.ndarray], ext_in: jnp.ndarray,
+                   config: jnp.ndarray,
+                   pe_cfg: Optional[Dict[str, jnp.ndarray]] = None,
+                   depth: int = 16
+                   ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+        """One fabric clock cycle for B configurations at once.
+
+        Every argument carries a leading batch dim: state regs (B, R) /
+        mem (B, M), ext_in (B, num_io), config (B, num_config), pe_cfg
+        leaves (B, ...). Returns (state', (B, num_io) observations). The
+        inner fixpoint sweep is the batched Pallas kernel when
+        ``use_pallas`` (the exhaustive connection-sweep layout of §3.3),
+        a vmapped gather otherwise."""
+        b = config.shape[0]
+        if pe_cfg is None:
+            pe_cfg = self.default_pe_cfg_batch(b)
+        a = self.arrays
+        sel = jax.vmap(self._selects)(config)          # (B, N)
+        vals = jnp.zeros((b, a.num_nodes), dtype=jnp.int32)
+
+        def pin(v):
+            if len(a.reg_ids):
+                v = v.at[:, jnp.asarray(a.reg_ids)].set(state["regs"])
+            if self.num_io:
+                v = v.at[:, jnp.asarray(self.io_in_nodes)].set(
+                    ext_in.astype(jnp.int32))
+            if self.num_mem:
+                v = v.at[:, jnp.asarray(self.mem_out)].set(
+                    state["mem"][:, :self.num_mem])
+            return v
+
+        vals = pin(vals)
+
+        def body(_, v):
+            v_ext = jnp.concatenate(
+                [v, jnp.zeros((b, 1), jnp.int32)], axis=1)
+            v = self._sweep_batch(v_ext, sel)
+            v = pin(v)
+            v = jax.vmap(self._eval_pes)(v, pe_cfg)
+            return v
+
+        vals = jax.lax.fori_loop(0, depth, body, vals)
+        vals_ext = jnp.concatenate(
+            [vals, jnp.zeros((b, 1), jnp.int32)], axis=1)
+        new_state = dict(state)
+        if len(a.reg_ids):
+            new_state["regs"] = vals_ext[:, jnp.asarray(a.reg_src)]
+        if self.num_mem:
+            new_state["mem"] = state["mem"].at[:, :self.num_mem].set(
+                vals_ext[:, jnp.asarray(self.mem_in)])
+        io_obs = (vals_ext[:, jnp.asarray(self.io_out_nodes)]
+                  if self.num_io else jnp.zeros((b, 0), jnp.int32))
+        return new_state, io_obs
+
+    def run_batch(self, configs: jnp.ndarray, ext_streams: jnp.ndarray,
+                  pe_cfgs: Optional[Dict[str, jnp.ndarray]] = None,
+                  depth: Optional[int] = None) -> jnp.ndarray:
+        """Evaluate B configurations in one ``lax.scan``.
+
+        configs: (B, num_config); ext_streams: (B, T, num_io); pe_cfgs
+        leaves (B, ...). Returns (B, T, num_io) observations — batched
+        equivalent of looping ``run`` over the B axis. ``depth=None``
+        computes the max per-config combinational depth on the host; for
+        configurations whose active network is acyclic (every legal
+        route) the result is then identical to per-config ``run``. A
+        config with a combinational loop has no fixpoint — its values
+        depend on the sweep count (and hence on the batch max) there,
+        exactly as they depended on the fixed bound before."""
+        b = configs.shape[0]
+        if depth is None:
+            host_cfgs = np.asarray(configs)
+            depth = max((self.combinational_depth(c) for c in host_cfgs),
+                        default=1)
+        if pe_cfgs is None:
+            pe_cfgs = self.default_pe_cfg_batch(b)
+        state = self.init_state_batch(b)
+        xs = jnp.swapaxes(jnp.asarray(ext_streams), 0, 1)   # (T, B, io)
+
+        def scan_fn(st, x):
+            st, obs = self.step_batch(st, x, configs, pe_cfgs, depth=depth)
+            return st, obs
+
+        _, out = jax.lax.scan(scan_fn, state, xs)
+        return jnp.swapaxes(out, 0, 1)                      # (B, T, io)
+
+    # ------------------------------------------------- combinational depth
+    def _selected_src_host(self, config: np.ndarray) -> np.ndarray:
+        """Host-side selected source per node under ``config`` (N,)."""
+        a = self.arrays
+        sel = np.zeros(a.num_nodes, np.int64)
+        mask = a.config_slot >= 0
+        if a.num_config:
+            cfg = np.asarray(config, np.int64)
+            sel[mask] = cfg[a.config_slot[mask]]
+        sel = np.clip(sel, 0, np.maximum(a.fanin_count - 1, 0))
+        return a.src[np.arange(a.num_nodes), sel]
+
+    def combinational_depth(self, config: np.ndarray,
+                            margin: int = 1) -> int:
+        """Sweeps needed to reach the fixpoint under ``config``: longest
+        register-free chain of the *configured* network (each mux follows
+        only its selected input), instead of the conservative fixed bound.
+
+        Chains are rooted at pinned nodes (registers, externally driven IO,
+        memory outputs, undriven nodes); a PE output sits one level above
+        its deepest input. A legal configuration's active network is
+        acyclic; combinational cycles through unconfigured default-0 muxes
+        are detected and excluded (their values never stabilize and no
+        routed path goes through them)."""
+        a = self.arrays
+        n = a.num_nodes
+        src_sel = self._selected_src_host(config)
+        pinned = (~a.is_driven) | a.is_reg
+        if len(self.io_in_nodes):
+            pinned[self.io_in_nodes] = True
+        if len(self.mem_out):
+            pinned[self.mem_out] = True
+        derive = ~pinned
+        depth = np.zeros(n + 1, np.int64)       # sentinel at n stays 0
+        prev_changed: Optional[np.ndarray] = None
+        cap = min(n + 2, 4096)
+        for _ in range(cap):
+            new = depth.copy()
+            new[:n][derive] = depth[src_sel[derive]] + 1
+            if self.num_pe:
+                pe_depth = depth[self.pe_in].max(axis=1) + 1   # (n_pe,)
+                for col in range(self.pe_out.shape[1]):
+                    new[self.pe_out[:, col]] = pe_depth
+            new[n] = 0
+            changed = np.nonzero(new != depth)[0]
+            depth = new
+            if changed.size == 0:
+                return int(depth.max()) + margin
+            if (prev_changed is not None
+                    and np.array_equal(changed, prev_changed)):
+                # a set equal to its own successor set contains a cycle:
+                # report the depth of the stable (acyclic) portion only
+                stable = np.ones(n + 1, bool)
+                stable[changed] = False
+                d = int(depth[stable].max()) if stable.any() else 0
+                return max(d + margin, 1)
+            prev_changed = changed
+        return cap
+
+    def depth_for_route(self, edges: Sequence[Tuple[Node, Node]],
+                        margin: int = 2) -> int:
+        """Sweeps needed to emulate a routed application: longest
+        register-free chain along the routed tree (PE core hops included),
+        replacing the conservative ``len(edges) + 4`` bound."""
+        sentinel = self.arrays.num_nodes
+        is_reg = self.arrays.is_reg
+        children: Dict[int, List[Tuple[int, int]]] = {}
+        indeg: Dict[int, int] = {}
+        nodes = set()
+
+        def add_edge(u: int, v: int, w: int) -> None:
+            children.setdefault(u, []).append((v, w))
+            indeg[v] = indeg.get(v, 0) + 1
+            nodes.add(u)
+            nodes.add(v)
+
+        for s, d in edges:
+            add_edge(self.node_id[s], self.node_id[d], 1)
+        # PE core hops are weight 0: _eval_pes runs after the gather, so a
+        # PE output settles in the same sweep as its inputs
+        for k in range(self.num_pe):
+            ins = [int(i) for i in self.pe_in[k] if i != sentinel]
+            for col in range(self.pe_out.shape[1]):
+                out = int(self.pe_out[k, col])
+                for i in ins:
+                    add_edge(i, out, 0)
+        # longest path over the routed DAG; registers restart the chain
+        depth = {i: 0 for i in nodes}
+        ready = [i for i in nodes if indeg.get(i, 0) == 0]
+        seen = 0
+        while ready:
+            u = ready.pop()
+            seen += 1
+            du = 0 if is_reg[u] else depth[u]
+            for v, w in children.get(u, ()):
+                if not is_reg[v]:
+                    depth[v] = max(depth[v], du + w)
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    ready.append(v)
+        if seen != len(nodes):
+            # combinational loop through a PE (route feeds the PE its own
+            # output): fall back to the conservative bound
+            return len(list(edges)) + 4
+        return max(depth.values(), default=0) + margin
 
     # ------------------------------------------------------- route → config
     def route_to_config(self, edges: Sequence[Tuple[Node, Node]]

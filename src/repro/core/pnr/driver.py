@@ -22,6 +22,8 @@ from .timing import sta_critical_path
 class PnRResult:
     success: bool
     placement: Dict[str, Tuple[int, int]] = field(default_factory=dict)
+    #: the packed netlist the flow placed/routed (emulation binds to it)
+    packed: Optional[PackedGraph] = None
     routing: Optional[RoutingResult] = None
     timing: Dict[str, float] = field(default_factory=dict)
     alpha: float = 1.0
@@ -79,15 +81,17 @@ def place_and_route(ic: Interconnect, app: AppGraph,
             packed, routing, pl,
             split_fifo_ctrl_delay=split_fifo_ctrl_delay)
         cand = PnRResult(
-            success=True, placement=pl, routing=routing, timing=timing,
-            alpha=alpha, wirelength=routing.total_wirelength(),
+            success=True, placement=pl, packed=packed, routing=routing,
+            timing=timing, alpha=alpha,
+            wirelength=routing.total_wirelength(),
             route_iterations=routing.iterations)
         if best is None or (cand.timing["critical_path_ns"]
                             < best.timing["critical_path_ns"]):
             best = cand
 
     if best is None:
-        return PnRResult(success=False, error=last_err or "unroutable",
+        return PnRResult(success=False, packed=packed,
+                         error=last_err or "unroutable",
                          seconds=time.perf_counter() - t0)
     best.seconds = time.perf_counter() - t0
     return best

@@ -108,11 +108,16 @@ class RoutingResult:
 
 def _astar(res: RoutingResources, sources: Dict[int, float], sink: int,
            cost_of: np.ndarray, crit: float, own_nodes: Set[int],
-           blocked: np.ndarray) -> Optional[List[int]]:
+           blocked: np.ndarray,
+           tie: Optional[np.ndarray] = None) -> Optional[List[int]]:
     """A* from a set of sources (the net's current route tree) to one sink.
-    cost_of: per-node negotiated cost; crit blends congestion vs delay."""
+    cost_of: per-node negotiated cost; crit blends congestion vs delay.
+    ``tie`` is a node permutation used as the tertiary heap key, so
+    equal-cost expansions pop in a seed-reproducible order."""
     tx, ty = res.xy[sink]
     h_scale = res.hop_cost * 0.5     # admissible-ish under negotiation
+    if tie is None:
+        tie = np.arange(len(res.nodes))
 
     def h(i: int) -> float:
         x, y = res.xy[i]
@@ -120,12 +125,12 @@ def _astar(res: RoutingResources, sources: Dict[int, float], sink: int,
 
     dist: Dict[int, float] = {}
     came: Dict[int, int] = {}
-    pq: List[Tuple[float, float, int]] = []
+    pq: List[Tuple[float, float, int, int]] = []
     for s, c0 in sources.items():
         dist[s] = c0
-        heapq.heappush(pq, (c0 + h(s), c0, s))
+        heapq.heappush(pq, (c0 + h(s), c0, int(tie[s]), s))
     while pq:
-        f, g, u = heapq.heappop(pq)
+        f, g, _, u = heapq.heappop(pq)
         if u == sink:
             path = [u]
             while u in came:
@@ -147,7 +152,7 @@ def _astar(res: RoutingResources, sources: Dict[int, float], sink: int,
             if ng < dist.get(v, np.inf) - 1e-12:
                 dist[v] = ng
                 came[v] = u
-                heapq.heappush(pq, (ng + h(v), ng, v))
+                heapq.heappush(pq, (ng + h(v), ng, int(tie[v]), v))
     return None
 
 
@@ -159,9 +164,14 @@ def route_nets(res: RoutingResources,
                node_capacity: Optional[np.ndarray] = None) -> RoutingResult:
     """PathFinder negotiation over (name, src, sinks) nets.
 
+    ``seed`` drives the deterministic tie-break permutation used by A*
+    when several expansions have equal cost, so DSE callers get
+    reproducible (and seed-variable) routes.
+
     node_capacity: per-node net capacity (default 1; >1 models virtual
     channels, e.g. the pod-fabric ICI model)."""
     n = len(res.nodes)
+    tie = np.random.default_rng(seed).permutation(n)
     usage = np.zeros(n, np.int32)
     hist = np.zeros(n, np.float64)
     cap = (np.ones(n, np.int32) if node_capacity is None
@@ -202,7 +212,7 @@ def route_nets(res: RoutingResources,
                                key=lambda s: -abs(res.xy[s][0] - res.xy[src][0])
                                - abs(res.xy[s][1] - res.xy[src][1])):
                 path = _astar(res, tree_nodes, sink, cost_of,
-                              crit.get(name, 0.0), own, blocked)
+                              crit.get(name, 0.0), own, blocked, tie=tie)
                 if path is None:
                     raise RoutingError(
                         f"unroutable net {name} -> {res.nodes[sink]} "

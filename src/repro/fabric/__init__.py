@@ -1,2 +1,2 @@
-from .simulator import AppEmulator  # noqa: F401
+from .simulator import AppEmulator, run_apps_batch  # noqa: F401
 from .ready_valid import RVFabric   # noqa: F401

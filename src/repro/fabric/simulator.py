@@ -46,8 +46,10 @@ class AppEmulator:
                        "imm_mask": jnp.asarray(imm_mask),
                        "imm_val": jnp.asarray(imm_val)}
         self.io_index = {c: i for i, c in enumerate(fabric.io_coords)}
-        # combinational depth bound: number of routed edges + core hops
-        self.depth = depth if depth is not None else len(route_edges) + 4
+        # fixpoint sweeps: longest register-free chain of the routed tree
+        # (replaces the conservative len(route_edges) + 4 bound)
+        self.depth = (depth if depth is not None
+                      else fabric.depth_for_route(route_edges))
 
     @classmethod
     def from_pnr(cls, fabric: FabricModule, packed, result,
@@ -65,12 +67,48 @@ class AppEmulator:
         return cls(fabric, result.route_edges(), pe_ops, pe_imms,
                    depth=depth)
 
-    def run(self, inputs: Dict[Tuple[int, int], np.ndarray], cycles: int
-            ) -> Dict[Tuple[int, int], np.ndarray]:
+    def ext_stream(self, inputs: Dict[Tuple[int, int], np.ndarray],
+                   cycles: int) -> np.ndarray:
+        """Dense (cycles, num_io) drive matrix; streams longer than the
+        emulation window are truncated."""
         ext = np.zeros((cycles, self.fabric.num_io), np.int32)
         for coord, stream in inputs.items():
+            stream = np.asarray(stream)[:cycles]
             ext[:len(stream), self.io_index[coord]] = stream
+        return ext
+
+    def run(self, inputs: Dict[Tuple[int, int], np.ndarray], cycles: int
+            ) -> Dict[Tuple[int, int], np.ndarray]:
+        ext = self.ext_stream(inputs, cycles)
         obs = self.fabric.run(self.config, jnp.asarray(ext),
                               pe_cfg=self.pe_cfg, depth=self.depth)
         obs = np.asarray(obs)
         return {c: obs[:, i] for c, i in self.io_index.items()}
+
+
+def run_apps_batch(emulators: Sequence[AppEmulator],
+                   inputs_list: Sequence[Dict[Tuple[int, int], np.ndarray]],
+                   cycles: int
+                   ) -> List[Dict[Tuple[int, int], np.ndarray]]:
+    """Emulate several routed applications on the *same* fabric as one
+    batch: all configs/PE programs/IO streams advance together through a
+    single ``FabricModule.run_batch`` scan (batched Pallas sweep when the
+    fabric was compiled with ``use_pallas=True``).
+
+    Equivalent to ``[e.run(i, cycles) for e, i in zip(...)]`` but one
+    compiled program for the whole batch — the DSE bulk-evaluation path."""
+    if not emulators:
+        return []
+    fab = emulators[0].fabric
+    if any(e.fabric is not fab for e in emulators):
+        raise ValueError("batched emulation requires a shared fabric")
+    ext = np.stack([e.ext_stream(i, cycles)
+                    for e, i in zip(emulators, inputs_list)])   # (B, T, io)
+    configs = jnp.stack([e.config for e in emulators])
+    pe_cfgs = {k: jnp.stack([e.pe_cfg[k] for e in emulators])
+               for k in emulators[0].pe_cfg}
+    depth = max(e.depth for e in emulators)
+    obs = np.asarray(fab.run_batch(configs, jnp.asarray(ext),
+                                   pe_cfgs=pe_cfgs, depth=depth))
+    return [{c: obs[b, :, i] for c, i in e.io_index.items()}
+            for b, e in enumerate(emulators)]

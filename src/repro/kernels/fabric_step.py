@@ -19,12 +19,19 @@ Validated in interpret mode against ``ref.fabric_sweep_ref``.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK_N = 512          # nodes per block (multiple of 128 lanes x 4 sublanes)
+
+
+@functools.lru_cache(maxsize=1)
+def _default_interpret() -> bool:
+    """Compiled on TPU, interpret elsewhere (CPU has no Mosaic backend)."""
+    return jax.default_backend() != "tpu"
 
 
 def _sweep_kernel(vals_ref, src_ref, sel_ref, out_ref):
@@ -37,9 +44,14 @@ def _sweep_kernel(vals_ref, src_ref, sel_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fabric_sweep(vals_ext: jnp.ndarray, src: jnp.ndarray, sel: jnp.ndarray,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
     """One sweep. vals_ext: (N+1,) with zero sentinel at N; src: (N, F)
-    int32 (sentinel-padded); sel: (N,). Returns (N,)."""
+    int32 (sentinel-padded); sel: (N,). Returns (N,).
+
+    ``interpret=None`` resolves from the backend: compiled on TPU,
+    interpret mode everywhere else."""
+    if interpret is None:
+        interpret = _default_interpret()
     n, f = src.shape
     n_pad = pl.cdiv(n, BLOCK_N) * BLOCK_N
     v_pad = pl.cdiv(vals_ext.shape[0], 128) * 128
@@ -78,10 +90,13 @@ def _sweep_batch_kernel(vals_ref, src_ref, sel_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fabric_sweep_batch(vals_ext: jnp.ndarray, src: jnp.ndarray,
-                       sel: jnp.ndarray, interpret: bool = True
+                       sel: jnp.ndarray, interpret: Optional[bool] = None
                        ) -> jnp.ndarray:
     """Batched sweep over configurations. vals_ext: (B, N+1); sel: (B, N);
-    src shared. Returns (B, N)."""
+    src shared. Returns (B, N). ``interpret=None`` resolves from the
+    backend (compiled on TPU, interpret elsewhere)."""
+    if interpret is None:
+        interpret = _default_interpret()
     b = vals_ext.shape[0]
     n, f = src.shape
     bb = 8                                     # configs per block

@@ -6,9 +6,6 @@ process from the backend.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
 from . import fabric_step as _fabric
@@ -16,11 +13,7 @@ from . import flash_attention as _flash
 from . import hpwl as _hpwl
 from . import minplus as _minplus
 from . import ssd_scan as _ssd
-
-
-@functools.lru_cache(maxsize=1)
-def _interpret() -> bool:
-    return jax.default_backend() == "cpu"
+from .fabric_step import _default_interpret as _interpret
 
 
 def fabric_sweep(vals_ext: jnp.ndarray, src: jnp.ndarray,

@@ -1,0 +1,75 @@
+"""Property-test layer: real ``hypothesis`` when installed, a tiny
+deterministic fallback otherwise.
+
+The seed container does not ship ``hypothesis``; hard imports made three
+test modules fail *collection* (taking the whole suite down). Importing
+``given``/``settings``/``st`` from here keeps the property tests running
+everywhere: with ``hypothesis`` (see requirements-dev.txt) the real engine
+shrinks failures; without it, each ``@given`` test is driven with
+``max_examples`` pseudo-random draws from a per-test deterministic seed.
+Only the strategies the suite uses (``integers``, ``sampled_from``) are
+shimmed.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:                       # pragma: no cover - env
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            items = list(elements)
+            return _Strategy(
+                lambda rng: items[int(rng.integers(len(items)))])
+
+    st = _StrategiesShim()
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            n = getattr(fn, "_max_examples", 10)
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # like hypothesis: trailing parameters are drawn, leading ones
+            # (pytest fixtures) pass through
+            split = len(params) - len(strats)
+            drawn_names = [p.name for p in params[split:]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {name: s.sample(rng)
+                             for name, s in zip(drawn_names, strats)}
+                    fn(*args, **kwargs, **drawn)
+            # pytest must only see the fixture parameters; the drawn ones
+            # would be mistaken for fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=params[:split])
+            return wrapper
+        return deco

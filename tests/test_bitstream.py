@@ -1,7 +1,7 @@
 """Bitstream codec round-trips (§3.3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bitstream import (BitstreamCodec, ConfigWord, deserialize,
                                   serialize)

@@ -1,6 +1,6 @@
 """Graph IR + eDSL unit/property tests (Canal §3.1–3.2)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.edsl import (SB_TOPOLOGIES, SwitchBoxType,
                              create_uniform_interconnect, sides_for)
