@@ -15,22 +15,33 @@ sweeps: one sweep propagates every node's value one combinational level.
 A legal configuration's active network is acyclic, so ``depth`` sweeps
 (≥ longest configured combinational path) reach the fixed point. The sweep
 itself is the perf hot spot and has a Pallas kernel
-(``repro.kernels.fabric_step``).
+(``repro.kernels.fabric_step``); the batched path runs the whole fixpoint
+— PE cores included — as one fused kernel call per cycle, masks each
+configuration to its own combinational depth, and shards the batch axis
+across devices (``run_batch``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.kernels.fabric_step import PE_OPS, pe_alu_candidates
 
 from .graph import (IO, Interconnect, Node, NodeKind, PortNode, Side)
 from .tiles import IOCore, MemCore, PECore, WORD
 
+assert PECore.OPS == PE_OPS, \
+    "fabric_step.PE_OPS must mirror PECore.OPS (shared PE ALU datapath)"
 PE_OP_IDS = {op: i for i, op in enumerate(PECore.OPS)}
+
+DepthSpec = Union[int, np.ndarray, jnp.ndarray]
 
 
 @dataclass
@@ -179,6 +190,36 @@ class FabricModule:
         self.num_pe = len(pe_in)
         self.num_io = len(io_in_nodes)
         self.num_mem = len(mem_in)
+        self._build_fused_tables()
+
+    def _build_fused_tables(self) -> None:
+        """Node/PE tables for the fused batched engine (one kernel call per
+        fixpoint): hold-flags, pin mask, sentinel-padded PE inputs and the
+        scatter-free node -> PE-result index map."""
+        a = self.arrays
+        n = a.num_nodes
+        p = max(self.num_pe, 1)
+        pe_in = np.full((p, 4), n, dtype=np.int32)
+        if self.num_pe:
+            pe_in[:self.num_pe] = self.pe_in
+        pe_res_idx = np.full(n, 2 * p, dtype=np.int32)
+        for k in range(self.num_pe):
+            for col in range(self.pe_out.shape[1]):
+                pe_res_idx[self.pe_out[k, col]] = 2 * k + col
+        pin_mask = np.zeros(n, dtype=np.int32)
+        if len(a.reg_ids):
+            pin_mask[a.reg_ids] = 1
+        if self.num_io:
+            pin_mask[self.io_in_nodes] = 1
+        if self.num_mem:
+            pin_mask[self.mem_out] = 1
+        self.fused_tables = {
+            "keep": (~a.is_driven).astype(np.int32),
+            "pin_mask": pin_mask,
+            "pe_in": pe_in,
+            "pe_res_idx": pe_res_idx,
+            "num_pe_slots": p,
+        }
 
     # -------------------------------------------------------------- interface
     @property
@@ -281,13 +322,7 @@ class FabricModule:
         a, b, c = ins[:, 0], ins[:, 1], ins[:, 2]
         op = pe_cfg["op"][:self.num_pe]
         const = pe_cfg["const"][:self.num_pe]
-        shift_b = jnp.clip(b, 0, 15)
-        candidates = jnp.stack([
-            a + b, a - b, a * b, a & b, a | b, a ^ b,
-            a << shift_b, a >> shift_b, jnp.minimum(a, b),
-            jnp.maximum(a, b), jnp.abs(a - b),
-            jnp.where((a & 1) == 1, b, c), const, a,
-        ], axis=0)                                    # (n_ops, n_pe)
+        candidates = pe_alu_candidates(a, b, c, const)   # (n_ops, n_pe)
         res0 = jnp.take_along_axis(candidates, op[None, :], axis=0)[0]
         res0 = res0 & WORD
         res1 = a & WORD                               # second output: pass-through
@@ -368,25 +403,75 @@ class FabricModule:
         _, out = jax.lax.scan(scan_fn, state, ext_stream)
         return out
 
+    def _norm_depth(self, depth: DepthSpec, max_depth: Optional[int],
+                    b: int) -> Tuple[jnp.ndarray, int]:
+        """Normalize a depth spec into ((B,) per-lane sweep counts,
+        static loop bound). A traced per-lane array needs an explicit
+        ``max_depth`` (e.g. under shard_map, where the lane axis is a
+        device-local slice of host-computed depths)."""
+        if isinstance(depth, (int, np.integer)):
+            md = int(depth) if max_depth is None else int(max_depth)
+            return jnp.full((b,), int(depth), jnp.int32), md
+        if max_depth is None:
+            try:
+                max_depth = int(np.max(np.asarray(depth))) if b else 1
+            except jax.errors.TracerArrayConversionError as e:
+                raise ValueError(
+                    "step_batch with a traced per-lane depth array needs "
+                    "an explicit static max_depth") from e
+        return jnp.asarray(depth, jnp.int32), int(max_depth)
+
+    def _norm_pe_cfg(self, pe_cfg: Dict[str, jnp.ndarray], b: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                jnp.ndarray]:
+        """PE program tables shaped for the fused kernel: (B, P) op/const
+        and (B, P, 4) immediates, P = max(num_pe, 1) slots."""
+        p = self.fused_tables["num_pe_slots"]
+        npe = self.num_pe
+
+        def pad2(x):
+            x = jnp.asarray(x, jnp.int32)[:, :npe]
+            return jnp.pad(x, ((0, 0), (0, p - npe)))
+
+        def pad3(key):
+            if key not in pe_cfg:
+                return jnp.zeros((b, p, 4), jnp.int32)
+            x = jnp.asarray(pe_cfg[key], jnp.int32)[:, :npe]
+            return jnp.pad(x, ((0, 0), (0, p - npe), (0, 0)))
+
+        return (pad2(pe_cfg["op"]), pad2(pe_cfg["const"]),
+                pad3("imm_mask"), pad3("imm_val"))
+
     def step_batch(self, state: Dict[str, jnp.ndarray], ext_in: jnp.ndarray,
                    config: jnp.ndarray,
                    pe_cfg: Optional[Dict[str, jnp.ndarray]] = None,
-                   depth: int = 16
+                   depth: DepthSpec = 16,
+                   max_depth: Optional[int] = None,
+                   fused: Optional[bool] = None
                    ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
         """One fabric clock cycle for B configurations at once.
 
         Every argument carries a leading batch dim: state regs (B, R) /
         mem (B, M), ext_in (B, num_io), config (B, num_config), pe_cfg
-        leaves (B, ...). Returns (state', (B, num_io) observations). The
-        inner fixpoint sweep is the batched Pallas kernel when
-        ``use_pallas`` (the exhaustive connection-sweep layout of §3.3),
-        a vmapped gather otherwise."""
+        leaves (B, ...). Returns (state', (B, num_io) observations).
+
+        ``depth`` is either a shared int or a (B,) per-configuration sweep
+        count: every lane runs the static ``max_depth`` loop but freezes
+        once its own count is reached, so each configuration performs
+        exactly its own fixpoint. ``fused`` (default True) runs the whole
+        fixpoint — PE evaluation included — as one fused kernel call
+        (``fabric_fused_batch`` when ``use_pallas``, its vmapped pure-jnp
+        oracle otherwise); ``fused=False`` keeps the sweep-at-a-time loop
+        (per-sweep batched Pallas gather + Python-level PE evaluation),
+        bit-identical, as the unfused baseline."""
         b = config.shape[0]
         if pe_cfg is None:
             pe_cfg = self.default_pe_cfg_batch(b)
+        if fused is None:
+            fused = True
         a = self.arrays
+        depths, max_depth = self._norm_depth(depth, max_depth, b)
         sel = jax.vmap(self._selects)(config)          # (B, N)
-        vals = jnp.zeros((b, a.num_nodes), dtype=jnp.int32)
 
         def pin(v):
             if len(a.reg_ids):
@@ -399,17 +484,39 @@ class FabricModule:
                     state["mem"][:, :self.num_mem])
             return v
 
-        vals = pin(vals)
+        # pinned sources on a zero background double as the initial values
+        pin_vals = pin(jnp.zeros((b, a.num_nodes), dtype=jnp.int32))
 
-        def body(_, v):
-            v_ext = jnp.concatenate(
-                [v, jnp.zeros((b, 1), jnp.int32)], axis=1)
-            v = self._sweep_batch(v_ext, sel)
-            v = pin(v)
-            v = jax.vmap(self._eval_pes)(v, pe_cfg)
-            return v
+        if fused:
+            t = self.fused_tables
+            op, const, imm_mask, imm_val = self._norm_pe_cfg(pe_cfg, b)
+            if self.use_pallas:
+                from repro.kernels import ops as kops
+                vals = kops.fabric_fused_batch(
+                    pin_vals, sel, pin_vals, depths, op, const, imm_mask,
+                    imm_val, jnp.asarray(a.src),
+                    jnp.asarray(t["keep"]), jnp.asarray(t["pin_mask"]),
+                    jnp.asarray(t["pe_in"]), jnp.asarray(t["pe_res_idx"]),
+                    max_depth=max_depth, word=WORD)
+            else:
+                from repro.kernels import ref as kref
+                vals = kref.fabric_fused_batch_ref(
+                    pin_vals, sel, pin_vals, depths, op, const, imm_mask,
+                    imm_val, jnp.asarray(a.src),
+                    jnp.asarray(t["keep"]), jnp.asarray(t["pin_mask"]),
+                    jnp.asarray(t["pe_in"]), jnp.asarray(self.pe_out),
+                    max_depth=max_depth, word=WORD)
+        else:
+            def body(i, v):
+                v_ext = jnp.concatenate(
+                    [v, jnp.zeros((b, 1), jnp.int32)], axis=1)
+                nv = self._sweep_batch(v_ext, sel)
+                nv = pin(nv)
+                nv = jax.vmap(self._eval_pes)(nv, pe_cfg)
+                return jnp.where((i < depths)[:, None], nv, v)
 
-        vals = jax.lax.fori_loop(0, depth, body, vals)
+            vals = jax.lax.fori_loop(0, max_depth, body, pin_vals)
+
         vals_ext = jnp.concatenate(
             [vals, jnp.zeros((b, 1), jnp.int32)], axis=1)
         new_state = dict(state)
@@ -422,36 +529,90 @@ class FabricModule:
                   if self.num_io else jnp.zeros((b, 0), jnp.int32))
         return new_state, io_obs
 
-    def run_batch(self, configs: jnp.ndarray, ext_streams: jnp.ndarray,
-                  pe_cfgs: Optional[Dict[str, jnp.ndarray]] = None,
-                  depth: Optional[int] = None) -> jnp.ndarray:
-        """Evaluate B configurations in one ``lax.scan``.
-
-        configs: (B, num_config); ext_streams: (B, T, num_io); pe_cfgs
-        leaves (B, ...). Returns (B, T, num_io) observations — batched
-        equivalent of looping ``run`` over the B axis. ``depth=None``
-        computes the max per-config combinational depth on the host; for
-        configurations whose active network is acyclic (every legal
-        route) the result is then identical to per-config ``run``. A
-        config with a combinational loop has no fixpoint — its values
-        depend on the sweep count (and hence on the batch max) there,
-        exactly as they depended on the fixed bound before."""
+    def _run_batch_local(self, configs: jnp.ndarray, ext: jnp.ndarray,
+                         pe_cfgs: Dict[str, jnp.ndarray],
+                         depths: jnp.ndarray, max_depth: int,
+                         fused: Optional[bool]) -> jnp.ndarray:
+        """One device's share of ``run_batch``: scan T cycles over a
+        (local) batch of configurations."""
         b = configs.shape[0]
-        if depth is None:
-            host_cfgs = np.asarray(configs)
-            depth = max((self.combinational_depth(c) for c in host_cfgs),
-                        default=1)
-        if pe_cfgs is None:
-            pe_cfgs = self.default_pe_cfg_batch(b)
         state = self.init_state_batch(b)
-        xs = jnp.swapaxes(jnp.asarray(ext_streams), 0, 1)   # (T, B, io)
+        xs = jnp.swapaxes(ext, 0, 1)                    # (T, B, io)
 
         def scan_fn(st, x):
-            st, obs = self.step_batch(st, x, configs, pe_cfgs, depth=depth)
+            st, obs = self.step_batch(st, x, configs, pe_cfgs,
+                                      depth=depths, max_depth=max_depth,
+                                      fused=fused)
             return st, obs
 
         _, out = jax.lax.scan(scan_fn, state, xs)
-        return jnp.swapaxes(out, 0, 1)                      # (B, T, io)
+        return jnp.swapaxes(out, 0, 1)                  # (B, T, io)
+
+    def run_batch(self, configs: jnp.ndarray, ext_streams: jnp.ndarray,
+                  pe_cfgs: Optional[Dict[str, jnp.ndarray]] = None,
+                  depth: Optional[DepthSpec] = None,
+                  fused: Optional[bool] = None,
+                  shard: Optional[bool] = None) -> jnp.ndarray:
+        """Evaluate B configurations in one ``lax.scan``.
+
+        configs: (B, num_config); ext_streams: (B, T, num_io); pe_cfgs
+        leaves (B, ...). Returns (B, T, num_io) observations — the batched
+        equivalent of looping ``run`` over the B axis, bit-identical to it
+        lane for lane. ``depth=None`` computes every configuration's own
+        combinational depth on the host; a lane freezes once its own count
+        is reached (masked early exit), so even an adversarial config with
+        a combinational loop — whose values depend on the sweep count —
+        sees exactly the sweeps its per-config ``run`` would.
+
+        ``shard`` (default: auto, on when >1 device) splits the batch axis
+        across ``jax.devices()`` via shard_map, padding B up to a multiple
+        of the device count; on a single device the local path runs
+        unsharded. ``fused`` selects the fused kernel engine (default) or
+        the sweep-at-a-time baseline."""
+        configs = jnp.asarray(configs)
+        ext = jnp.asarray(ext_streams)
+        b = configs.shape[0]
+        if depth is None:
+            host_cfgs = np.asarray(configs)
+            depths_np = np.array(
+                [self.combinational_depth(c) for c in host_cfgs],
+                dtype=np.int32) if b else np.zeros(0, np.int32)
+        else:
+            depths_np = np.broadcast_to(
+                np.asarray(depth, np.int32), (b,))
+        max_depth = int(depths_np.max()) if b else 1
+        if pe_cfgs is None:
+            pe_cfgs = self.default_pe_cfg_batch(b)
+        devices = jax.devices()
+        n_dev = len(devices)
+        use_shard = (n_dev > 1) if shard is None else shard
+        if not use_shard or n_dev <= 1 or b == 0:
+            return self._run_batch_local(configs, ext, pe_cfgs,
+                                         jnp.asarray(depths_np),
+                                         max_depth, fused)
+
+        bp = -(-b // n_dev) * n_dev                     # ceil to devices
+        pad = bp - b
+
+        def pad_b(x):
+            x = jnp.asarray(x)
+            return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+        mesh = Mesh(np.array(devices), ("b",))
+        spec = PartitionSpec("b")
+
+        def local(c, e, p, d):
+            return self._run_batch_local(c, e, p, d, max_depth, fused)
+
+        # check_rep=False: shard_map has no replication rule for
+        # pallas_call; every operand/output is explicitly batch-sharded
+        sharded = shard_map(local, mesh=mesh,
+                            in_specs=(spec, spec, spec, spec),
+                            out_specs=spec, check_rep=False)
+        out = sharded(pad_b(configs), pad_b(ext),
+                      {k: pad_b(v) for k, v in pe_cfgs.items()},
+                      jnp.asarray(np.pad(depths_np, (0, pad))))
+        return out[:b]
 
     # ------------------------------------------------- combinational depth
     def _selected_src_host(self, config: np.ndarray) -> np.ndarray:

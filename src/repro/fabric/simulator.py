@@ -88,15 +88,20 @@ class AppEmulator:
 
 def run_apps_batch(emulators: Sequence[AppEmulator],
                    inputs_list: Sequence[Dict[Tuple[int, int], np.ndarray]],
-                   cycles: int
+                   cycles: int,
+                   shard: Optional[bool] = None
                    ) -> List[Dict[Tuple[int, int], np.ndarray]]:
     """Emulate several routed applications on the *same* fabric as one
     batch: all configs/PE programs/IO streams advance together through a
-    single ``FabricModule.run_batch`` scan (batched Pallas sweep when the
-    fabric was compiled with ``use_pallas=True``).
+    single ``FabricModule.run_batch`` scan (the fused batched Pallas
+    kernel when the fabric was compiled with ``use_pallas=True``).
 
-    Equivalent to ``[e.run(i, cycles) for e, i in zip(...)]`` but one
-    compiled program for the whole batch — the DSE bulk-evaluation path."""
+    Each app sweeps exactly its own routed combinational depth — lanes
+    with shallower routes freeze early instead of padding to the batch
+    max — so this is bit-identical to ``[e.run(i, cycles) for e, i in
+    zip(...)]`` while compiling one program for the whole batch — the DSE
+    bulk-evaluation path. ``shard`` forwards to ``run_batch``: the app
+    axis is split across devices when more than one is visible."""
     if not emulators:
         return []
     fab = emulators[0].fabric
@@ -107,8 +112,9 @@ def run_apps_batch(emulators: Sequence[AppEmulator],
     configs = jnp.stack([e.config for e in emulators])
     pe_cfgs = {k: jnp.stack([e.pe_cfg[k] for e in emulators])
                for k in emulators[0].pe_cfg}
-    depth = max(e.depth for e in emulators)
+    depths = np.array([e.depth for e in emulators], dtype=np.int32)
     obs = np.asarray(fab.run_batch(configs, jnp.asarray(ext),
-                                   pe_cfgs=pe_cfgs, depth=depth))
+                                   pe_cfgs=pe_cfgs, depth=depths,
+                                   shard=shard))
     return [{c: obs[b, :, i] for c, i in e.io_index.items()}
             for b, e in enumerate(emulators)]

@@ -1,8 +1,9 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 On CPU (this container) kernels run in interpret mode; on TPU the same
-``pallas_call`` lowers to Mosaic. ``interpret`` is resolved once per
-process from the backend.
+``pallas_call`` lowers to Mosaic. ``interpret`` is resolved from the
+backend on every call, so a mid-process platform swap (tests forcing
+``jax.default_backend``) picks the right mode.
 """
 from __future__ import annotations
 
@@ -25,6 +26,21 @@ def fabric_sweep_batch(vals_ext: jnp.ndarray, src: jnp.ndarray,
                        sel: jnp.ndarray) -> jnp.ndarray:
     return _fabric.fabric_sweep_batch(vals_ext, src, sel,
                                       interpret=_interpret())
+
+
+def fabric_fused_batch(vals0: jnp.ndarray, sel: jnp.ndarray,
+                       pin_vals: jnp.ndarray, depths: jnp.ndarray,
+                       op: jnp.ndarray, const: jnp.ndarray,
+                       imm_mask: jnp.ndarray, imm_val: jnp.ndarray,
+                       src: jnp.ndarray, keep: jnp.ndarray,
+                       pin_mask: jnp.ndarray, pe_in: jnp.ndarray,
+                       pe_res_idx: jnp.ndarray, max_depth: int,
+                       word: int = 0xFFFF) -> jnp.ndarray:
+    """Fused batched fixpoint: masked sweeps + in-kernel PE evaluation."""
+    return _fabric.fabric_fused_batch(
+        vals0, sel, pin_vals, depths, op, const, imm_mask, imm_val,
+        src, keep, pin_mask, pe_in, pe_res_idx, max_depth=max_depth,
+        word=word, interpret=_interpret())
 
 
 def hpwl(pins: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:

@@ -17,6 +17,49 @@ def fabric_sweep_batch_ref(vals_ext: jnp.ndarray, src: jnp.ndarray,
     return jax.vmap(lambda v, s: fabric_sweep_ref(v, src, s))(vals_ext, sel)
 
 
+def fabric_fused_batch_ref(vals0: jnp.ndarray, sel: jnp.ndarray,
+                           pin_vals: jnp.ndarray, depths: jnp.ndarray,
+                           op: jnp.ndarray, const: jnp.ndarray,
+                           imm_mask: jnp.ndarray, imm_val: jnp.ndarray,
+                           src: jnp.ndarray, keep: jnp.ndarray,
+                           pin_mask: jnp.ndarray, pe_in: jnp.ndarray,
+                           pe_out: jnp.ndarray, max_depth: int,
+                           word: int = 0xFFFF) -> jnp.ndarray:
+    """Scatter-based oracle for ``fabric_fused_batch``: a vmapped lane
+    loop of gather -> hold-undriven -> re-pin -> PE-eval sweeps, each lane
+    frozen once its own ``depths`` count is reached. Same contract as the
+    kernel except PE outputs are named by ``pe_out`` (n_pe, n_cols) node
+    ids instead of the kernel's flattened ``pe_res_idx`` map."""
+    from .fabric_step import pe_alu_candidates
+
+    n_pe = pe_out.shape[0]
+
+    def lane(v0, s, pv, d, o, cst, im, iv):
+        def sweep(t, v):
+            v_ext = jnp.concatenate([v, jnp.zeros(1, jnp.int32)])
+            picked = jnp.take_along_axis(src, s[:, None], axis=1)[:, 0]
+            nv = v_ext[picked]
+            nv = jnp.where(keep > 0, v, nv)
+            nv = jnp.where(pin_mask > 0, pv, nv)
+            nv_ext = jnp.concatenate([nv, jnp.zeros(1, jnp.int32)])
+            ins = nv_ext[pe_in]
+            ins = jnp.where(im > 0, iv, ins)
+            a, b, c = ins[:, 0], ins[:, 1], ins[:, 2]
+            cand = pe_alu_candidates(a, b, c, cst)
+            res0 = jnp.take_along_axis(cand, o[None, :], axis=0)[0] & word
+            res1 = a & word
+            if n_pe:
+                nv = nv.at[pe_out[:, 0]].set(res0[:n_pe])
+                if pe_out.shape[1] > 1:
+                    nv = nv.at[pe_out[:, 1]].set(res1[:n_pe])
+            return jnp.where(t < d, nv, v)
+
+        return jax.lax.fori_loop(0, max_depth, sweep, v0)
+
+    return jax.vmap(lane)(vals0, sel, pin_vals, depths, op, const,
+                          imm_mask, imm_val)
+
+
 def hpwl_ref(pins: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     big = jnp.int32(1 << 20)
     m = mask > 0

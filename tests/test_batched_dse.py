@@ -30,10 +30,14 @@ def _random_cases(fab, b, t, seed=0):
     return cfgs, ext
 
 
-@pytest.mark.parametrize("use_pallas", [False, True])
-def test_run_batch_matches_looped_run(small_ic, use_pallas):
+@pytest.mark.parametrize("use_pallas,fused", [(False, True),
+                                              (False, False),
+                                              (True, True),
+                                              (True, False)])
+def test_run_batch_matches_looped_run(small_ic, use_pallas, fused):
     """B configurations through one run_batch == B serial run calls —
-    the Pallas variant exercises fabric_sweep_batch end to end."""
+    the Pallas/fused variant exercises fabric_fused_batch end to end,
+    the unfused one the sweep-at-a-time fabric_sweep_batch baseline."""
     fab = compile_interconnect(small_ic, use_pallas=use_pallas)
     cfgs, ext = _random_cases(fab, b=4, t=5)
     serial = np.stack([
@@ -41,7 +45,8 @@ def test_run_batch_matches_looped_run(small_ic, use_pallas):
                            depth=8))
         for i in range(len(cfgs))])
     batched = np.asarray(fab.run_batch(jnp.asarray(cfgs),
-                                       jnp.asarray(ext), depth=8))
+                                       jnp.asarray(ext), depth=8,
+                                       fused=fused))
     np.testing.assert_array_equal(serial, batched)
 
 
@@ -184,3 +189,27 @@ def test_batched_vs_serial_emulation_equal_and_recorded():
                                       batch=3, cycles=4, use_pallas=False)
     assert rec["batch"] == 3 and rec["serial_seconds"] > 0
     assert rec["batched_seconds"] > 0
+
+
+def test_fused_vs_unfused_emulation_equal_and_recorded():
+    """The benchmark engine asserts fused == unfused internally; the
+    record carries the per-config depth spread it masked over."""
+    from repro.core.dse import fused_vs_unfused_emulation
+
+    rec = fused_vs_unfused_emulation(width=4, height=4, num_tracks=2,
+                                     batch=3, cycles=4, use_pallas=False)
+    assert rec["unfused_seconds"] > 0 and rec["fused_seconds"] > 0
+    assert rec["min_depth"] >= 1
+    assert rec["max_depth"] >= rec["min_depth"]
+
+
+def test_sharded_vs_single_emulation_single_device_fallback():
+    """On one visible device the sharded call must take the local path
+    and stay bit-identical (asserted inside the engine)."""
+    from repro.core.dse import sharded_vs_single_emulation
+
+    rec = sharded_vs_single_emulation(width=4, height=4, num_tracks=2,
+                                      batch=3, cycles=4,
+                                      use_pallas=False)
+    assert rec["devices"] >= 1
+    assert rec["single_seconds"] > 0 and rec["sharded_seconds"] > 0

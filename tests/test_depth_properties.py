@@ -1,0 +1,91 @@
+"""Property tests for the computed combinational depths.
+
+``combinational_depth`` (generic, whole configured network) must cover
+``depth_for_route`` (routed tree only) so that a route's config always
+gets enough fixpoint sweeps, and its cycle guard must terminate with a
+sane bound on adversarial configs that wire combinational loops."""
+import functools
+
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core.edsl import create_uniform_interconnect
+from repro.core.lowering import compile_interconnect
+from test_lowering_fabric import manual_east_route
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(width=4, height=4, num_tracks=2):
+    ic = create_uniform_interconnect(width=width, height=height,
+                                     num_tracks=num_tracks,
+                                     sb_type="wilton", io_ring=True,
+                                     reg_density=1.0)
+    return ic, compile_interconnect(ic)
+
+
+@given(st.integers(1, 2), st.integers(0, 1), st.sampled_from([4, 5]))
+@settings(max_examples=8, deadline=None)
+def test_combinational_depth_covers_routed_tree(y, track, size):
+    """The generic per-config depth is at least the routed tree's chain
+    length (equal margins): the sweeps a route needs are always granted."""
+    ic, fab = _setup(size, size)
+    edges = manual_east_route(ic, y=y, track=track)
+    cfg = fab.route_to_config(edges)
+    assert fab.combinational_depth(cfg) >= fab.depth_for_route(edges,
+                                                               margin=1)
+
+
+@given(st.integers(1, 2), st.integers(0, 1))
+@settings(max_examples=4, deadline=None)
+def test_route_config_depth_sufficient_for_fixpoint(y, track):
+    """Emulating with the computed per-config depth reproduces the
+    fixpoint a generous fixed bound reaches (legal routes are acyclic)."""
+    ic, fab = _setup()
+    edges = manual_east_route(ic, y=y, track=track)
+    cfg = jnp.asarray(fab.route_to_config(edges))
+    ext = jnp.asarray(np.arange(1, 5 * fab.num_io + 1, dtype=np.int32)
+                      .reshape(5, fab.num_io))
+    auto = np.asarray(fab.run(cfg, ext))
+    fixed = np.asarray(fab.run(cfg, ext, depth=64))
+    np.testing.assert_array_equal(auto, fixed)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_cycle_guard_terminates_on_adversarial_configs(seed):
+    """Random configs can wire combinational loops (no fixpoint): the
+    cycle guard must still terminate and report a positive, bounded
+    sweep count instead of diverging."""
+    _, fab = _setup()
+    rng = np.random.default_rng(seed)
+    cfg = rng.integers(0, 8, fab.num_config).astype(np.int32)
+    d = fab.combinational_depth(cfg)
+    assert 1 <= d <= fab.arrays.num_nodes + 2
+
+
+def test_cycle_guard_excludes_unstable_portion():
+    """The all-zeros default config on this fabric contains register-
+    bypass loops; the guard reports the stable portion's depth, which a
+    legal route's depth then dominates."""
+    ic, fab = _setup()
+    zero = fab.combinational_depth(np.zeros(fab.num_config, np.int32))
+    assert zero >= 1
+    edges = manual_east_route(ic)
+    routed = fab.combinational_depth(fab.route_to_config(edges))
+    assert routed >= fab.depth_for_route(edges, margin=1)
+
+
+def test_depth_for_route_cycle_fallback():
+    """A route that feeds a PE its own output has no finite chain: the
+    conservative ``len(edges) + 4`` fallback bound must kick in."""
+    ic, fab = _setup()
+    g = ic.graph(16)
+    x, y = fab.pe_coords[0]
+    res0 = g.get_port(x, y, "res0")
+    data0 = g.get_port(x, y, "data0")
+    # res0 -> data0 route edge + the implicit weight-0 PE hop
+    # data0 -> res0 closes a combinational loop
+    edges = [(res0, data0)]
+    assert fab.depth_for_route(edges) == len(edges) + 4

@@ -33,6 +33,47 @@ def test_fabric_sweep_batch(b):
         np.asarray(ref.fabric_sweep_batch_ref(vals, src, sel)))
 
 
+@given(st.integers(1, 10), st.integers(0, 2**31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_fabric_fused_batch_vs_oracle(b, seed):
+    """Fused fixpoint kernel (gather-form PE placement, per-lane depth
+    masking) vs the scatter-form pure-jnp oracle on random tables."""
+    rng = np.random.default_rng(seed)
+    n, f, n_pe, max_depth = 150, 3, 6, 7
+    p = n_pe
+    vals0 = rng.integers(0, 1000, (b, n)).astype(np.int32)
+    sel = rng.integers(0, f, (b, n)).astype(np.int32)
+    pin_mask = (rng.random(n) < 0.2).astype(np.int32)
+    pin_vals = np.where(pin_mask[None, :] > 0, vals0, 0).astype(np.int32)
+    depths = rng.integers(0, max_depth + 1, b).astype(np.int32)
+    op = rng.integers(0, 14, (b, p)).astype(np.int32)
+    const = rng.integers(0, 1000, (b, p)).astype(np.int32)
+    imm_mask = (rng.random((b, p, 4)) < 0.25).astype(np.int32)
+    imm_val = rng.integers(0, 1000, (b, p, 4)).astype(np.int32)
+    src = rng.integers(0, n + 1, (n, f)).astype(np.int32)
+    keep = (rng.random(n) < 0.15).astype(np.int32)
+    pe_in = rng.integers(0, n + 1, (p, 4)).astype(np.int32)
+    # distinct PE output nodes, kept un-pinned so both forms agree on
+    # evaluation order (PE eval runs after pinning)
+    out_nodes = rng.choice(n, size=2 * p, replace=False).astype(np.int32)
+    pin_mask[out_nodes] = 0
+    pe_out = out_nodes.reshape(p, 2)
+    pe_res_idx = np.full(n, 2 * p, np.int32)
+    for k_ in range(p):
+        pe_res_idx[pe_out[k_, 0]] = 2 * k_
+        pe_res_idx[pe_out[k_, 1]] = 2 * k_ + 1
+    args = [jnp.asarray(x) for x in
+            (vals0, sel, pin_vals, depths, op, const, imm_mask, imm_val,
+             src, keep, pin_mask)]
+    np.testing.assert_array_equal(
+        np.asarray(ops.fabric_fused_batch(
+            *args, jnp.asarray(pe_in), jnp.asarray(pe_res_idx),
+            max_depth=max_depth)),
+        np.asarray(ref.fabric_fused_batch_ref(
+            *args, jnp.asarray(pe_in), jnp.asarray(pe_out),
+            max_depth=max_depth)))
+
+
 @given(st.integers(1, 400), st.integers(1, 9), st.integers(0, 2**31 - 1))
 @settings(max_examples=12, deadline=None)
 def test_hpwl_property(n_nets, k, seed):

@@ -1,6 +1,7 @@
 """Hybrid ready-valid NoC backend (§3.3, Figs. 5–6)."""
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
@@ -65,6 +66,37 @@ def test_ready_propagates_to_source(rv_ic, mode):
     # items absorbed = final source pointer; recompute by rerunning with
     # ready-latched sources is internal, so check via valid at sink only:
     assert np.asarray(ov)[:, io_idx[(3, 1)]].max() <= 1
+
+
+@pytest.mark.parametrize("mode", ["full", "split"])
+@given(st.integers(1, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_token_conservation_random_backpressure(rv_ic, mode, n_items,
+                                                seed):
+    """Conservation under a random backpressure schedule: the fabric must
+    neither drop nor duplicate tokens. The sink stalls randomly (~50%)
+    for a window, then drains — every injected token must arrive exactly
+    once, in order, for both FIFO lowerings."""
+    fab = compile_ready_valid(rv_ic, fifo_mode=mode)
+    edges = manual_east_route(rv_ic)
+    config = jnp.asarray(fab.route_to_config(edges))
+    io_idx = {c: i for i, c in enumerate(fab.io_coords)}
+    rng = np.random.default_rng(seed)
+    T = 40
+    streams = np.zeros((T, fab.num_io), np.int32)
+    lens = np.zeros(fab.num_io, np.int32)
+    src, dst = io_idx[(0, 1)], io_idx[(3, 1)]
+    streams[:n_items, src] = np.arange(1, n_items + 1)
+    lens[src] = n_items
+    sink_ready = np.ones((T, fab.num_io), np.int32)
+    # random stalls over the first 26 cycles, full drain afterwards
+    sink_ready[:26, dst] = (rng.random(26) < 0.5).astype(np.int32)
+    od, ov, acc = fab.run_with_sources(config, jnp.asarray(streams),
+                                       jnp.asarray(lens),
+                                       jnp.asarray(sink_ready), depth=20)
+    received = np.asarray(od)[:, dst][np.asarray(acc)[:, dst] > 0]
+    assert list(received) == list(range(1, n_items + 1)), \
+        f"{mode} seed={seed}: lost/dup/reordered tokens: {received}"
 
 
 def test_full_mode_buffers_more_than_split(rv_ic):
