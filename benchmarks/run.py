@@ -23,7 +23,7 @@ def main() -> None:
 
     from . import (dse_speed, fig08_fifo_area, fig09_topology_routability,
                    fig10_track_area, fig11_track_runtime, fig13_port_area,
-                   fig14_15_port_runtime)
+                   fig14_15_port_runtime, pnr_speed)
     try:
         from . import kernels_bench
     except Exception:                                  # pragma: no cover
@@ -34,7 +34,7 @@ def main() -> None:
         roofline_table = None
 
     mods = [fig08_fifo_area, fig10_track_area, fig13_port_area, dse_speed,
-            fig09_topology_routability, fig11_track_runtime,
+            pnr_speed, fig09_topology_routability, fig11_track_runtime,
             fig14_15_port_runtime]
     if kernels_bench is not None:
         mods.append(kernels_bench)

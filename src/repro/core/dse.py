@@ -13,6 +13,13 @@ design point as one batched ``FabricModule.run_batch`` scan — the fused
 batched Pallas kernel (PE cores evaluated in-kernel, per-app depth
 masking) when ``use_pallas=True``, sharded across devices when more than
 one is visible.
+
+Host PnR and device emulation are *pipelined*: with
+``pipeline_emulation=True`` (default) a design point's emulation batch is
+dispatched asynchronously to a per-device emulation queue the moment its
+routes are ready, so the router works on the next point while the fabric
+of the previous one is still sweeping on device; the emulation futures
+are joined before records are returned/persisted.
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ import json
 import os
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .area import connection_box_area, switch_box_area
@@ -47,7 +54,11 @@ class SweepExecutor:
                  split_fifo_ctrl_delay: float = 0.0,
                  max_workers: Optional[int] = None,
                  emulate_cycles: int = 0, use_pallas: bool = True,
-                 shard: Optional[bool] = None, seed: int = 0):
+                 shard: Optional[bool] = None, seed: int = 0,
+                 route_strategy: str = "auto",
+                 reg_penalty: float = 4.0,
+                 pipeline_emulation: bool = True,
+                 io_chunk: Optional[int] = None):
         self.apps = apps or BENCH_APPS
         self.sa_steps = sa_steps
         self.sa_batch = sa_batch
@@ -58,10 +69,22 @@ class SweepExecutor:
         self.use_pallas = use_pallas
         self.shard = shard
         self.seed = seed
+        #: router engine (repro.core.pnr.route): "auto" routes big fabrics
+        #: with the device-batched min-plus lower bounds
+        self.route_strategy = route_strategy
+        self.reg_penalty = reg_penalty
+        self.pipeline_emulation = pipeline_emulation
+        #: ext-IO streaming chunk for long stimulus traces (HBM-gridded
+        #: fused kernel); None keeps the per-cycle scan
+        self.io_chunk = io_chunk
         self._lock = threading.Lock()
         self._ic_cache: Dict[Tuple, Any] = {}
         self._res_cache: Dict[Tuple, Any] = {}
         self._fab_cache: Dict[Tuple, Any] = {}
+        self._emu_pool: Optional[ThreadPoolExecutor] = None
+        self._emu_devices: List[Any] = []
+        self._emu_rr = 0
+        self._pending: List[Future] = []
         self.records: List[Dict] = []
 
     # ------------------------------------------------------------- caches
@@ -79,14 +102,21 @@ class SweepExecutor:
                 ic = self._ic_cache.setdefault(key, ic)
         return ic
 
-    def resources(self, ic, key: Tuple):
+    def resources(self, ic, key: Tuple,
+                  reg_penalty: Optional[float] = None):
+        """Shared ``RoutingResources`` (adjacency, base costs, coarse
+        graph), keyed on ``(interconnect, reg_penalty)`` — a penalty
+        change must not hand back arrays priced for a different one (the
+        old per-interconnect key silently would have)."""
         from .pnr.route import RoutingResources
+        rp = self.reg_penalty if reg_penalty is None else reg_penalty
+        ckey = (key, float(rp))
         with self._lock:
-            res = self._res_cache.get(key)
+            res = self._res_cache.get(ckey)
         if res is None:
-            res = RoutingResources(ic)
+            res = RoutingResources(ic, reg_penalty=rp)
             with self._lock:
-                res = self._res_cache.setdefault(key, res)
+                res = self._res_cache.setdefault(ckey, res)
         return res
 
     def fabric(self, ic, key: Tuple):
@@ -99,14 +129,75 @@ class SweepExecutor:
                 fab = self._fab_cache.setdefault(key, fab)
         return fab
 
+    # ----------------------------------------------------- emulation queue
+    def _emu_queue(self) -> Tuple[ThreadPoolExecutor, Any]:
+        """Lazily build the per-device emulation queue and pick the next
+        device round-robin. With batch-axis sharding active a single
+        queue feeds ``run_batch`` (which already spans every device);
+        otherwise each device gets its own dispatch thread and points are
+        distributed across them."""
+        import jax
+
+        with self._lock:
+            if self._emu_pool is None:
+                devs = jax.devices()
+                use_shard = ((len(devs) > 1) if self.shard is None
+                             else self.shard)
+                self._emu_devices = ([None] if use_shard and len(devs) > 1
+                                     else list(devs))
+                self._emu_pool = ThreadPoolExecutor(
+                    max_workers=len(self._emu_devices),
+                    thread_name_prefix="dse-emu")
+            dev = self._emu_devices[self._emu_rr % len(self._emu_devices)]
+            self._emu_rr += 1
+        return self._emu_pool, dev
+
+    def _submit_emulation(self, fab, routed: List[Tuple[str, Any, Any]],
+                          out: Dict[str, Dict]) -> Future:
+        """Dispatch one design point's emulation batch asynchronously; the
+        returned future merges the report into ``out`` when done. Router
+        threads keep running while the device sweeps."""
+        pool, dev = self._emu_queue()
+
+        def work():
+            emu = self._emulate_batch(fab, routed, device=dev)
+            for name, info in emu.items():
+                out[name]["emulation"] = info
+
+        fut = pool.submit(work)
+        with self._lock:
+            self._pending.append(fut)
+        return fut
+
+    def join_pending(self) -> None:
+        """Block until every dispatched emulation batch has merged its
+        report (re-raising the first worker error), then release the
+        queue threads — the pool is rebuilt lazily on the next dispatch,
+        so repeated sweeps don't accumulate idle workers."""
+        try:
+            while True:
+                with self._lock:
+                    if not self._pending:
+                        break
+                    fut = self._pending.pop()
+                fut.result()
+        finally:
+            with self._lock:
+                pool, self._emu_pool = self._emu_pool, None
+            if pool is not None:
+                pool.shutdown(wait=True)
+
     # ----------------------------------------------------- point execution
-    def _emulate_batch(self, fab, routed: List[Tuple[str, Any, Any]]
-                      ) -> Dict[str, Dict]:
+    def _emulate_batch(self, fab, routed: List[Tuple[str, Any, Any]],
+                       device: Any = None) -> Dict[str, Dict]:
         """Emulate all routed apps of one design point as a single batch.
 
         ``routed``: (name, packed, PnRResult) triples on ``fab``. Drives a
         common counter stimulus on every app input and records the output
         checksum — the bulk validation pass of the batched DSE engine.
+        ``device`` pins the batch to one accelerator (the per-device
+        emulation queues of the async pipeline); None keeps the default
+        placement (sharded across devices when enabled).
         """
         import numpy as np
         from repro.fabric import AppEmulator, run_apps_batch
@@ -123,7 +214,14 @@ class SweepExecutor:
             emulators.append(emu)
             inputs.append(ins)
             names.append(name)
-        outs = run_apps_batch(emulators, inputs, T, shard=self.shard)
+        if device is not None:
+            import jax
+            with jax.default_device(device):
+                outs = run_apps_batch(emulators, inputs, T, shard=False,
+                                      io_chunk=self.io_chunk)
+        else:
+            outs = run_apps_batch(emulators, inputs, T, shard=self.shard,
+                                  io_chunk=self.io_chunk)
         report: Dict[str, Dict] = {}
         for name, emu, out in zip(names, emulators, outs):
             checksum = int(sum(int(np.asarray(v, np.int64).sum())
@@ -133,8 +231,14 @@ class SweepExecutor:
         return report
 
     def run_point(self, ic_kwargs: Dict,
-                  extra: Optional[Dict] = None) -> Dict:
-        """PnR every app on one design point; emit a sweep record."""
+                  extra: Optional[Dict] = None,
+                  defer_emulation: bool = False) -> Dict:
+        """PnR every app on one design point; emit a sweep record.
+
+        ``defer_emulation`` dispatches the emulation batch to the async
+        per-device queue instead of running it inline; the record's
+        ``emulation`` entries appear once the future lands (callers join
+        via :meth:`join_pending` — :meth:`run_points` does)."""
         t0 = time.perf_counter()
         ic = self.interconnect(**ic_kwargs)
         key = self._key(ic_kwargs)
@@ -146,7 +250,8 @@ class SweepExecutor:
             r = place_and_route(
                 ic, app, alphas=self.alphas, sa_steps=self.sa_steps,
                 sa_batch=self.sa_batch, resources=res, seed=self.seed,
-                split_fifo_ctrl_delay=self.split_fifo_ctrl_delay)
+                split_fifo_ctrl_delay=self.split_fifo_ctrl_delay,
+                route_strategy=self.route_strategy)
             out[name] = {
                 "success": r.success,
                 "critical_path_ns": r.timing.get("critical_path_ns",
@@ -164,33 +269,47 @@ class SweepExecutor:
         rec["cb_area"] = connection_box_area(ic)
         if routed:
             fab = self.fabric(ic, key)
-            emu = self._emulate_batch(fab, routed)
-            for name, info in emu.items():
-                out[name]["emulation"] = info
+            if defer_emulation:
+                self._submit_emulation(fab, routed, out)
+            else:
+                emu = self._emulate_batch(fab, routed)
+                for name, info in emu.items():
+                    out[name]["emulation"] = info
         # wall time includes interconnect generation (cache misses pay it,
-        # cache hits legitimately report the shared-cache speedup)
+        # cache hits legitimately report the shared-cache speedup); with
+        # deferred emulation it covers host PnR only — emulation overlaps
         rec["gen_pnr_seconds"] = time.perf_counter() - t0
         return rec
 
     def run_points(self, points: Sequence[Tuple[Dict, Dict]]) -> List[Dict]:
         """Evaluate (ic_kwargs, extra) design points, concurrently when the
         pool has more than one worker. Order of records matches ``points``.
-        """
+
+        With ``pipeline_emulation`` the device emulation of point k runs
+        under the host PnR of point k+1 (async dispatch); every emulation
+        future is joined before the records are returned."""
         workers = self.max_workers
         if workers is None:
             workers = min(len(points), os.cpu_count() or 1, 4)
-        if workers <= 1 or len(points) <= 1:
-            recs = [self.run_point(kw, extra) for kw, extra in points]
-        else:
-            with ThreadPoolExecutor(max_workers=workers) as pool:
-                futs = [pool.submit(self.run_point, kw, extra)
+        defer = self.pipeline_emulation and self.emulate_cycles > 0
+        try:
+            if workers <= 1 or len(points) <= 1:
+                recs = [self.run_point(kw, extra, defer_emulation=defer)
                         for kw, extra in points]
-                recs = [f.result() for f in futs]
+            else:
+                with ThreadPoolExecutor(max_workers=workers) as pool:
+                    futs = [pool.submit(self.run_point, kw, extra, defer)
+                            for kw, extra in points]
+                    recs = [f.result() for f in futs]
+        finally:
+            self.join_pending()
         self.records.extend(recs)
         return recs
 
     def save_json(self, path: str) -> str:
-        """Persist accumulated records (consumed by benchmarks/run.py)."""
+        """Persist accumulated records (consumed by benchmarks/run.py).
+        Joins any still-pending emulation futures first."""
+        self.join_pending()
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)

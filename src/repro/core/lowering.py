@@ -220,6 +220,34 @@ class FabricModule:
             "pe_res_idx": pe_res_idx,
             "num_pe_slots": p,
         }
+        self._stream_tables: Optional[Dict[str, np.ndarray]] = None
+
+    def stream_tables(self) -> Dict[str, np.ndarray]:
+        """Node tables for the streamed fused engine: the node → state
+        gather map for scatter-free per-cycle re-pinning. State layout is
+        ``[regs | ext io | mem | zero]``; every non-pinned node points at
+        the trailing zero slot."""
+        if self._stream_tables is None:
+            a = self.arrays
+            n_reg = len(a.reg_ids)
+            s_len = n_reg + self.num_io + self.num_mem + 1
+            pin_src = np.full(a.num_nodes, s_len - 1, dtype=np.int32)
+            if n_reg:
+                pin_src[a.reg_ids] = np.arange(n_reg, dtype=np.int32)
+            if self.num_io:
+                pin_src[self.io_in_nodes] = n_reg + np.arange(
+                    self.num_io, dtype=np.int32)
+            if self.num_mem:
+                pin_src[self.mem_out] = n_reg + self.num_io + np.arange(
+                    self.num_mem, dtype=np.int32)
+            self._stream_tables = {
+                "pin_src": pin_src,
+                "reg_src": a.reg_src.astype(np.int32),
+                "mem_in": self.mem_in.astype(np.int32),
+                "io_out": self.io_out_nodes.astype(np.int32),
+                "n_reg": n_reg,
+            }
+        return self._stream_tables
 
     # -------------------------------------------------------------- interface
     @property
@@ -529,12 +557,43 @@ class FabricModule:
                   if self.num_io else jnp.zeros((b, 0), jnp.int32))
         return new_state, io_obs
 
+    def _run_batch_stream(self, configs: jnp.ndarray, ext: jnp.ndarray,
+                          pe_cfgs: Dict[str, jnp.ndarray],
+                          depths: jnp.ndarray, max_depth: int,
+                          io_chunk: int) -> jnp.ndarray:
+        """Streamed fused engine: the whole T-cycle emulation in one
+        kernel invocation, ext-IO gridded from HBM in ``io_chunk``-cycle
+        blocks instead of materializing (B, T, io) beside the value
+        matrices in VMEM. Bit-identical to the per-cycle scan."""
+        from repro.kernels import ops as kops
+
+        a = self.arrays
+        b = configs.shape[0]
+        sel = jax.vmap(self._selects)(configs)
+        op, const, imm_mask, imm_val = self._norm_pe_cfg(pe_cfgs, b)
+        t = self.fused_tables
+        s = self.stream_tables()
+        return kops.fabric_fused_run(
+            sel, ext, depths, op, const, imm_mask, imm_val,
+            jnp.asarray(a.src), jnp.asarray(t["keep"]),
+            jnp.asarray(t["pin_mask"]), jnp.asarray(s["pin_src"]),
+            jnp.asarray(t["pe_in"]), jnp.asarray(t["pe_res_idx"]),
+            jnp.asarray(s["reg_src"]), jnp.asarray(s["mem_in"]),
+            jnp.asarray(s["io_out"]), n_reg=s["n_reg"],
+            n_io=self.num_io, n_mem=self.num_mem, max_depth=max_depth,
+            chunk=io_chunk, word=WORD)
+
     def _run_batch_local(self, configs: jnp.ndarray, ext: jnp.ndarray,
                          pe_cfgs: Dict[str, jnp.ndarray],
                          depths: jnp.ndarray, max_depth: int,
-                         fused: Optional[bool]) -> jnp.ndarray:
+                         fused: Optional[bool],
+                         io_chunk: Optional[int] = None) -> jnp.ndarray:
         """One device's share of ``run_batch``: scan T cycles over a
-        (local) batch of configurations."""
+        (local) batch of configurations — or, with ``io_chunk`` on the
+        Pallas fused engine, one streamed multi-cycle kernel call."""
+        if io_chunk and self.use_pallas and (fused is None or fused):
+            return self._run_batch_stream(configs, ext, pe_cfgs, depths,
+                                          max_depth, io_chunk)
         b = configs.shape[0]
         state = self.init_state_batch(b)
         xs = jnp.swapaxes(ext, 0, 1)                    # (T, B, io)
@@ -552,7 +611,8 @@ class FabricModule:
                   pe_cfgs: Optional[Dict[str, jnp.ndarray]] = None,
                   depth: Optional[DepthSpec] = None,
                   fused: Optional[bool] = None,
-                  shard: Optional[bool] = None) -> jnp.ndarray:
+                  shard: Optional[bool] = None,
+                  io_chunk: Optional[int] = None) -> jnp.ndarray:
         """Evaluate B configurations in one ``lax.scan``.
 
         configs: (B, num_config); ext_streams: (B, T, num_io); pe_cfgs
@@ -568,7 +628,16 @@ class FabricModule:
         across ``jax.devices()`` via shard_map, padding B up to a multiple
         of the device count; on a single device the local path runs
         unsharded. ``fused`` selects the fused kernel engine (default) or
-        the sweep-at-a-time baseline."""
+        the sweep-at-a-time baseline.
+
+        ``io_chunk`` streams the external IO from HBM in chunks of that
+        many cycles through the fused multi-cycle kernel
+        (``fabric_fused_run``) instead of scanning one kernel call per
+        cycle — for long stimulus traces only (B, io_chunk, io) of the
+        stimulus is resident per grid step. Requires ``use_pallas`` and
+        the fused engine; otherwise it is ignored (the reference scan
+        already keeps the trace in host/HBM memory). Bit-identical to the
+        unstreamed path either way."""
         configs = jnp.asarray(configs)
         ext = jnp.asarray(ext_streams)
         b = configs.shape[0]
@@ -589,7 +658,7 @@ class FabricModule:
         if not use_shard or n_dev <= 1 or b == 0:
             return self._run_batch_local(configs, ext, pe_cfgs,
                                          jnp.asarray(depths_np),
-                                         max_depth, fused)
+                                         max_depth, fused, io_chunk)
 
         bp = -(-b // n_dev) * n_dev                     # ceil to devices
         pad = bp - b
@@ -602,7 +671,8 @@ class FabricModule:
         spec = PartitionSpec("b")
 
         def local(c, e, p, d):
-            return self._run_batch_local(c, e, p, d, max_depth, fused)
+            return self._run_batch_local(c, e, p, d, max_depth, fused,
+                                         io_chunk)
 
         # check_rep=False: shard_map has no replication rule for
         # pallas_call; every operand/output is explicitly batch-sharded

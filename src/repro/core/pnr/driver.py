@@ -44,10 +44,14 @@ def place_and_route(ic: Interconnect, app: AppGraph,
                     route_iters: int = 40,
                     split_fifo_ctrl_delay: float = 0.0,
                     seed: int = 0,
-                    resources: Optional[RoutingResources] = None
-                    ) -> PnRResult:
+                    resources: Optional[RoutingResources] = None,
+                    route_strategy: str = "python") -> PnRResult:
     """Run the full three-stage PnR flow, sweeping α and keeping the best
-    post-route critical path (paper §3.4)."""
+    post-route critical path (paper §3.4).
+
+    ``route_strategy`` selects the router engine (see
+    ``repro.core.pnr.route``): ``"python"`` A* oracle, ``"minplus"``
+    device-batched coarse lower bounds, or ``"auto"``."""
     t0 = time.perf_counter()
     W = int(ic.params.get("width", ic.dims()[0]))
     H = int(ic.params.get("height", ic.dims()[1]))
@@ -73,7 +77,8 @@ def place_and_route(ic: Interconnect, app: AppGraph,
                             n_steps=sa_steps, batch=sa_batch, seed=seed)
         try:
             routing = route_app(ic, packed, pl, max_iters=route_iters,
-                                res=resources, seed=seed)
+                                res=resources, seed=seed,
+                                strategy=route_strategy)
         except RoutingError as e:
             last_err = str(e)
             continue

@@ -9,6 +9,49 @@ The router works directly on the interconnect IR (Fig. 7): edge weights are
 the IR's embedded delays; congestion terms are negotiated over iterations;
 net criticality (delay / max delay of the previous iteration) blends the
 congestion cost with the pure-delay cost.
+
+Two-level routing scheme (``strategy=`` knob on :func:`route_nets`):
+
+``"python"``
+    The oracle: pure-Python A* over the fine IR graph with a Manhattan
+    lower bound. Exact, dependency-free, and the semantics every other
+    strategy is measured against.
+
+``"minplus"``
+    Device-batched coarse wavefronts feeding the same fine expander. Per
+    PathFinder iteration the router tile-coarsens the congestion-weighted
+    graph (one node per tile, crossing-edge weights reduced to their
+    cheapest member, inf-padded to 128 blocks), then runs ONE batched
+    tropical Bellman-Ford fixpoint (``repro.kernels.minplus``) seeded at
+    every distinct sink tile of every net being (re)routed. Each resulting
+    cost field is an *admissible* A* lower bound: a coarse edge weight is
+    ``min(delay-part, congestion-part)`` of the cheapest fine crossing
+    edge — a lower bound of the blended fine cost for any net criticality
+    — plus the source tile's transit toll (the cheapest exit node's base
+    cost; refunded per-node for nodes that are themselves exits), while
+    all other intra-tile moves cost 0: no fine path can be cheaper than
+    the coarse field says. The expander adds a small per-remaining-tile
+    hop bias on top (``_MINPLUS_HOP_BIAS``) that collapses equal-cost
+    plateaus into a directed dive and steers ties toward fewer-hop,
+    lower-wire-delay trees, so routes are cost-optimal up to a bounded
+    few-percent premium while expanding far fewer nodes (the field
+    prices in mux delays, register penalties and congestion history that
+    the Manhattan bound ignores) and pruning coarse-unreachable tiles
+    outright.
+    The coarse structure is built once per :class:`RoutingResources` and
+    cached; per iteration only the congestion weights are refreshed, and
+    the history-free fields of iteration 0 are memoized per sink tile
+    across calls (α sweeps re-route the same sinks).
+
+``"auto"``
+    ``"minplus"`` on fabrics with at least ``_AUTO_MIN_TILES`` tiles,
+    ``"python"`` below — coarse fields only pay for themselves once the
+    search space is big enough.
+
+When each strategy wins: ``python`` on tiny fabrics (< ~7x7, where field
+setup dominates) and as the differential oracle; ``minplus`` everywhere
+else — the ≥8x8 DSE sweeps route the same trees legality-identically at a
+multiple of the nets/sec (see ``benchmarks/pnr_speed.py``).
 """
 from __future__ import annotations
 
@@ -26,6 +69,27 @@ class RoutingError(RuntimeError):
     pass
 
 
+#: value used for "no coarse edge" — matches repro.kernels.minplus.INF
+#: (float32-safe: two of these still add without overflowing to inf)
+COARSE_INF = 3.0e38 / 4
+#: anything above this is treated as coarse-unreachable
+_INF_CUT = COARSE_INF / 2
+#: "auto" strategy switches to the device-batched coarse fields at this
+#: many tiles (~7x7): below, field setup costs more than it prunes
+_AUTO_MIN_TILES = 49
+#: hop bias of the minplus expander, as a fraction of ``hop_cost`` per
+#: remaining Manhattan tile: f = g + h + bias·manhattan. With a
+#: near-exact h every monotone staircase between source and sink ties
+#: within float ulps and plain A* floods that whole rectangle; the bias
+#: makes nodes nearer the sink strictly preferred (collapsing the
+#: plateau into a dive) *and* steers equal-cost ties toward fewer-hop —
+#: lower wire-delay — trees. Cost premium is bounded by
+#: bias·hop_cost·manhattan(src, sink), a few percent of a typical path,
+#: which PathFinder's negotiation absorbs (the differential suite bounds
+#: the delay drift at 10%).
+_MINPLUS_HOP_BIAS = 0.05
+
+
 # Port-name normalization for instances whose kind changed during packing
 # (unpacked registers become pass-through PEs).
 _PORT_ALIAS = {"out": "res0", "in": "data0"}
@@ -36,18 +100,29 @@ class RoutingResources:
 
     def __init__(self, ic: Interconnect, reg_penalty: float = 4.0):
         self.ic = ic
+        self.reg_penalty = reg_penalty
         self.nodes: List[Node] = list(ic.nodes())
         self.node_id: Dict[Node, int] = {n: i for i, n in
                                          enumerate(self.nodes)}
         n = len(self.nodes)
         adj: List[List[Tuple[int, float]]] = [[] for _ in range(n)]
+        # one pass builds every destination's fan-in position map, so the
+        # edge loop below is O(E) instead of the old O(E * max_fanin)
+        # (``dst.fan_in.index(node)`` per edge)
+        fanin_pos: Dict[Node, Dict[Node, int]] = {
+            node: {s: k for k, s in enumerate(node.fan_in)}
+            for node in self.nodes}
+        #: (src_id, dst_id) -> wire delay of that edge (STA / net delay)
+        self.edge_delay_map: Dict[Tuple[int, int], float] = {}
         min_hop = np.inf
         for i, node in enumerate(self.nodes):
             for dst in node.fan_out:
                 j = self.node_id[dst]
-                k = dst.fan_in.index(node)
-                d = dst.edge_delay_in[k] + dst.delay
+                k = fanin_pos[dst][node]
+                wire = dst.edge_delay_in[k]
+                d = wire + dst.delay
                 adj[i].append((j, d))
+                self.edge_delay_map[(i, j)] = wire
                 if d > 0:
                     min_hop = min(min_hop, d)
         self.adj = adj
@@ -61,6 +136,18 @@ class RoutingResources:
                               if nd.kind == NodeKind.REGISTER else 0.0)
             for nd in self.nodes], np.float64)
         self.hop_cost = float(min_hop if np.isfinite(min_hop) else 0.1)
+        # plain-list coordinates: the minplus expander's hop bias reads
+        # them per heap push, where list indexing beats numpy scalars
+        self.x_list: List[int] = self.xy[:, 0].tolist()
+        self.y_list: List[int] = self.xy[:, 1].tolist()
+        self._coarse: Optional["CoarseGraph"] = None
+
+    def coarse(self) -> "CoarseGraph":
+        """The tile-coarsened view, built once and cached (per-iteration
+        congestion weights are refreshed on top of this structure)."""
+        if self._coarse is None:
+            self._coarse = CoarseGraph(self)
+        return self._coarse
 
     def port(self, x: int, y: int, name: str, width: int) -> int:
         g = self.ic.graph(width)
@@ -68,6 +155,158 @@ class RoutingResources:
         if tile is None or name not in tile.ports:
             raise RoutingError(f"no port {name} at tile ({x},{y})")
         return self.node_id[tile.get_port(name)]
+
+
+class CoarseGraph:
+    """Tile-coarsened routing graph for the batched min-plus wavefronts.
+
+    One coarse node per (x, y) tile; a coarse edge between two tiles
+    carries the cheapest lower bound over all fine edges crossing between
+    them. Only the static structure (crossing-edge index arrays) lives
+    here — congestion weights are recomputed per PathFinder iteration by
+    :meth:`lower_bound_weights`, and the dense matrix handed to the
+    device is rebuilt from cached indices in O(E_crossing).
+    """
+
+    def __init__(self, res: RoutingResources):
+        xy = res.xy
+        if len(xy) == 0:
+            raise RoutingError("cannot coarsen an empty routing graph")
+        x0, y0 = int(xy[:, 0].min()), int(xy[:, 1].min())
+        self.gw = int(xy[:, 0].max()) - x0 + 1
+        self.gh = int(xy[:, 1].max()) - y0 + 1
+        self.n_tiles = self.gw * self.gh
+        #: fine node id -> coarse tile id
+        self.tile_of = ((xy[:, 1] - y0) * self.gw
+                        + (xy[:, 0] - x0)).astype(np.int32)
+        srcs: List[int] = []
+        dsts: List[int] = []
+        statics: List[float] = []
+        dst_nodes: List[int] = []
+        #: node has at least one fine edge leaving its tile
+        self.is_exit = np.zeros(len(res.nodes), bool)
+        for i, nbrs in enumerate(res.adj):
+            ti = int(self.tile_of[i])
+            for j, d in nbrs:
+                tj = int(self.tile_of[j])
+                if ti == tj:
+                    continue
+                self.is_exit[i] = True
+                srcs.append(ti)
+                dsts.append(tj)
+                # delay part of the blended fine cost: d + base[dst]
+                statics.append(d + res.base[j])
+                dst_nodes.append(j)
+        self.e_src_tile = np.asarray(srcs, np.int32)
+        self.e_dst_tile = np.asarray(dsts, np.int32)
+        self.e_static = np.asarray(statics, np.float64)
+        self.e_dst_node = np.asarray(dst_nodes, np.int32)
+        # transit toll: leaving tile t costs at least the cheapest
+        # exit node's own arrival cost (``base`` bounds the blended cost
+        # for every criticality and congestion state). Charged on the
+        # crossing's source side; nodes that *are* exits get it refunded
+        # in sink_cost_fields, so the bound stays admissible — PROVIDED
+        # no crossing lands directly on an exit node (true for SB-based
+        # fabrics, where crossings terminate on SB_IN nodes with only
+        # intra-tile fan-out). A graph that violates that (e.g. a torus
+        # of chip nodes, every node both entry and exit) could transit a
+        # tile through its entry node alone, and the toll would double-
+        # charge it: drop the toll there, keeping the fields admissible
+        # at the price of a looser bound.
+        self.exit_toll = np.full(self.n_tiles, COARSE_INF, np.float64)
+        exits = np.nonzero(self.is_exit)[0]
+        if len(exits):
+            np.minimum.at(self.exit_toll, self.tile_of[exits],
+                          res.base[exits])
+        if len(self.e_dst_node) and self.is_exit[self.e_dst_node].any():
+            self.exit_toll[:] = 0.0
+        #: history-free cost fields memoized per sink tile (iteration-0
+        #: fields depend only on the static graph, so α sweeps and
+        #: repeated apps on the same fabric reuse them across calls);
+        #: _base_lists additionally memoizes the refund-adjusted per-node
+        #: Python lists A* consumes (the tolist conversion is hot)
+        self._base_rows: Dict[int, np.ndarray] = {}
+        self._base_lists: Dict[int, List[float]] = {}
+
+    def lower_bound_weights(self, cost_lb: np.ndarray) -> np.ndarray:
+        """Dense (n_tiles, n_tiles) coarse adjacency of per-crossing lower
+        bounds: ``min(delay_part, congestion_part)`` minimized over the
+        fine edges of each tile pair, plus the source tile's transit toll
+        (every fine path must pay its cheapest exit node before leaving);
+        0 on the diagonal (intra-tile moves are otherwise free in the
+        coarse model — underestimates, stays admissible).
+
+        ``cost_lb`` must itself lower-bound the per-node negotiated cost
+        for every net of the iteration (callers pass
+        ``base * (1 + hist_w * hist)``, dropping the intra-iteration
+        present-usage term)."""
+        w = np.full((self.n_tiles, self.n_tiles), COARSE_INF, np.float64)
+        if len(self.e_static):
+            lb = np.minimum(self.e_static, cost_lb[self.e_dst_node])
+            np.minimum.at(w, (self.e_src_tile, self.e_dst_tile), lb)
+            has_exit = self.exit_toll < COARSE_INF
+            w[has_exit] += self.exit_toll[has_exit, None]
+        np.fill_diagonal(w, 0.0)
+        return w
+
+    def sink_cost_fields(self, res: RoutingResources, sinks: Sequence[int],
+                         hist: np.ndarray, hist_w: float
+                         ) -> Dict[int, np.ndarray]:
+        """Per-sink admissible heuristic arrays, batched on device.
+
+        One batched tropical Bellman-Ford fixpoint covers every distinct
+        sink *tile* at once (lane b seeded 0 at its tile, INF elsewhere,
+        relaxed over the transposed coarse weights = cost *to* the sink);
+        the per-tile rows are then expanded to per-fine-node arrays.
+        Nodes that are themselves tile exits get the transit toll of
+        their own tile refunded: they can take a crossing edge directly,
+        without first paying for an intra-tile hop to an exit.
+        Returns {sink node id: (n_nodes,) per-node lower bounds} as
+        Python lists (what the A* inner loop indexes fastest), memoized
+        per sink tile for the history-free case."""
+        tiles = sorted({int(self.tile_of[s]) for s in sinks})
+        zero_hist = not hist.any()
+        if zero_hist:
+            missing = [t for t in tiles if t not in self._base_rows]
+        else:
+            missing = tiles
+        rows: Dict[int, np.ndarray] = {}
+        if missing:
+            from repro.kernels import ops as kops
+
+            w = self.lower_bound_weights(
+                res.base * (1.0 + hist_w * hist))
+            # bucket the seed batch to a power of two: the jitted
+            # relaxation keys its trace on the batch size, and memoization
+            # makes len(missing) vary call to call — without bucketing
+            # every new count would pay a fresh XLA compile on the hot
+            # routing path (padding lanes stay all-INF and converge
+            # immediately)
+            bucket = 1
+            while bucket < len(missing):
+                bucket *= 2
+            d0 = np.full((bucket, self.n_tiles), COARSE_INF, np.float32)
+            d0[np.arange(len(missing)), missing] = 0.0
+            out = np.asarray(kops.minplus_wavefront(
+                d0, w.T.astype(np.float32)), np.float64)
+            for row, t in zip(out, missing):
+                rows[t] = row
+                if zero_hist:
+                    self._base_rows[t] = row
+        if zero_hist:
+            for t in tiles:
+                rows.setdefault(t, self._base_rows[t])
+        refund = np.where(self.is_exit, self.exit_toll[self.tile_of], 0.0)
+        lists: Dict[int, List[float]] = {}
+        for t in tiles:
+            if zero_hist and t in self._base_lists:
+                lists[t] = self._base_lists[t]
+                continue
+            lists[t] = np.maximum(rows[t][self.tile_of] - refund,
+                                  0.0).tolist()
+            if zero_hist:
+                self._base_lists[t] = lists[t]
+        return {int(s): lists[int(self.tile_of[s])] for s in sinks}
 
 
 @dataclass
@@ -109,28 +348,50 @@ class RoutingResult:
 def _astar(res: RoutingResources, sources: Dict[int, float], sink: int,
            cost_of: np.ndarray, crit: float, own_nodes: Set[int],
            blocked: np.ndarray,
-           tie: Optional[np.ndarray] = None) -> Optional[List[int]]:
+           tie: Optional[np.ndarray] = None,
+           h_arr: Optional[Sequence[float]] = None) -> Optional[List[int]]:
     """A* from a set of sources (the net's current route tree) to one sink.
     cost_of: per-node negotiated cost; crit blends congestion vs delay.
     ``tie`` is a node permutation used as the tertiary heap key, so
-    equal-cost expansions pop in a seed-reproducible order."""
+    equal-cost expansions pop in a seed-reproducible order.
+
+    ``h_arr`` replaces the Manhattan bound with a precomputed per-node
+    lower bound (the device-batched coarse min-plus field); entries at or
+    above ``_INF_CUT`` mark coarse-unreachable nodes, pruned outright.
+    Because that bound is near-exact, a small per-remaining-tile hop bias
+    (``_MINPLUS_HOP_BIAS``) is added on top: it collapses the equal-cost
+    staircase plateau into a directed dive and prefers fewer-hop (lower
+    wire-delay) representatives among equal-cost trees, at a bounded
+    cost premium of ``bias·hop_cost`` per tile of separation."""
     tx, ty = res.xy[sink]
     h_scale = res.hop_cost * 0.5     # admissible-ish under negotiation
     if tie is None:
         tie = np.arange(len(res.nodes))
+    g_sign = 1.0 if h_arr is None else -1.0
 
-    def h(i: int) -> float:
-        x, y = res.xy[i]
-        return (abs(int(x) - int(tx)) + abs(int(y) - int(ty))) * h_scale
+    if h_arr is None:
+        def h(i: int) -> float:
+            x, y = res.xy[i]
+            return (abs(int(x) - int(tx)) + abs(int(y) - int(ty))) * h_scale
+    else:
+        bias = res.hop_cost * _MINPLUS_HOP_BIAS
+        xs, ys = res.x_list, res.y_list
+        txi, tyi = int(tx), int(ty)
+
+        def h(i: int) -> float:
+            return h_arr[i] + (abs(xs[i] - txi) + abs(ys[i] - tyi)) * bias
 
     dist: Dict[int, float] = {}
     came: Dict[int, int] = {}
     pq: List[Tuple[float, float, int, int]] = []
     for s, c0 in sources.items():
+        if h_arr is not None and h_arr[s] >= _INF_CUT:
+            continue                      # cannot reach the sink from here
         dist[s] = c0
-        heapq.heappush(pq, (c0 + h(s), c0, int(tie[s]), s))
+        heapq.heappush(pq, (c0 + h(s), g_sign * c0, int(tie[s]), s))
     while pq:
-        f, g, _, u = heapq.heappop(pq)
+        f, sg, _, u = heapq.heappop(pq)
+        g = g_sign * sg
         if u == sink:
             path = [u]
             while u in came:
@@ -147,13 +408,27 @@ def _astar(res: RoutingResources, sources: Dict[int, float], sink: int,
                 # ports are endpoints, never pass-throughs
                 if res.kind[v] == int(NodeKind.PORT):
                     continue
+            if h_arr is not None and h_arr[v] >= _INF_CUT:
+                continue
             w = crit * (d + res.base[v]) + (1.0 - crit) * cost_of[v]
             ng = g + w
             if ng < dist.get(v, np.inf) - 1e-12:
                 dist[v] = ng
                 came[v] = u
-                heapq.heappush(pq, (ng + h(v), ng, int(tie[v]), v))
+                heapq.heappush(pq, (ng + h(v), g_sign * ng, int(tie[v]), v))
     return None
+
+
+def _resolve_strategy(res: RoutingResources, strategy: str) -> str:
+    if strategy in ("python", "minplus"):
+        return strategy
+    if strategy == "auto":
+        return ("minplus" if res.coarse().n_tiles >= _AUTO_MIN_TILES
+                else "python")
+    # deliberately NOT a RoutingError: place_and_route treats those as
+    # ordinary routing failures (unroutable design points), which would
+    # silently turn a config typo into an all-failed sweep
+    raise ValueError(f"unknown routing strategy {strategy!r}")
 
 
 def route_nets(res: RoutingResources,
@@ -161,7 +436,8 @@ def route_nets(res: RoutingResources,
                max_iters: int = 40, pres_fac0: float = 0.6,
                pres_growth: float = 1.5, hist_w: float = 0.4,
                seed: int = 0,
-               node_capacity: Optional[np.ndarray] = None) -> RoutingResult:
+               node_capacity: Optional[np.ndarray] = None,
+               strategy: str = "python") -> RoutingResult:
     """PathFinder negotiation over (name, src, sinks) nets.
 
     ``seed`` drives the deterministic tie-break permutation used by A*
@@ -169,7 +445,12 @@ def route_nets(res: RoutingResources,
     reproducible (and seed-variable) routes.
 
     node_capacity: per-node net capacity (default 1; >1 models virtual
-    channels, e.g. the pod-fabric ICI model)."""
+    channels, e.g. the pod-fabric ICI model).
+
+    ``strategy``: ``"python"`` (Manhattan-bounded A*, the oracle),
+    ``"minplus"`` (device-batched coarse cost fields as A* lower bounds;
+    see the module docstring), or ``"auto"``."""
+    strat = _resolve_strategy(res, strategy)
     n = len(res.nodes)
     tie = np.random.default_rng(seed).permutation(n)
     usage = np.zeros(n, np.int32)
@@ -196,6 +477,13 @@ def route_nets(res: RoutingResources,
                                                 cap)]
         if it > 0 and not to_route:
             break
+        # one batched device fixpoint prices every sink of the iteration
+        h_fields: Dict[int, List[float]] = {}
+        if strat == "minplus":
+            all_sinks = [s for k in to_route for s in nets[k][2]]
+            if all_sinks:
+                h_fields = res.coarse().sink_cost_fields(
+                    res, all_sinks, hist, hist_w)
         for k in to_route:
             name, src, sinks = nets[k]
             old = routed.pop(name, None)
@@ -212,7 +500,8 @@ def route_nets(res: RoutingResources,
                                key=lambda s: -abs(res.xy[s][0] - res.xy[src][0])
                                - abs(res.xy[s][1] - res.xy[src][1])):
                 path = _astar(res, tree_nodes, sink, cost_of,
-                              crit.get(name, 0.0), own, blocked, tie=tie)
+                              crit.get(name, 0.0), own, blocked, tie=tie,
+                              h_arr=h_fields.get(sink))
                 if path is None:
                     raise RoutingError(
                         f"unroutable net {name} -> {res.nodes[sink]} "
@@ -271,9 +560,8 @@ def _net_delay(res: RoutingResources, net: RoutedNet) -> float:
         if nid in memo:
             return memo[nid]
         parent = net.tree[nid]
-        d = delay_to(parent) + res.nodes[nid].delay
-        k = res.nodes[nid].fan_in.index(res.nodes[parent])
-        d += res.nodes[nid].edge_delay_in[k]
+        d = (delay_to(parent) + res.nodes[nid].delay
+             + res.edge_delay_map[(parent, nid)])
         memo[nid] = d
         return d
 
@@ -284,7 +572,7 @@ def route_app(ic: Interconnect, packed: PackedGraph,
               placement: Dict[str, Tuple[int, int]],
               width: int = 16, max_iters: int = 40,
               res: Optional[RoutingResources] = None,
-              seed: int = 0) -> RoutingResult:
+              seed: int = 0, strategy: str = "python") -> RoutingResult:
     """Route a packed+placed application on the interconnect."""
     if res is None:
         res = RoutingResources(ic)
@@ -311,4 +599,5 @@ def route_app(ic: Interconnect, packed: PackedGraph,
         if not sinks:
             continue
         nets.append((net.name, src, sinks))
-    return route_nets(res, nets, max_iters=max_iters, seed=seed)
+    return route_nets(res, nets, max_iters=max_iters, seed=seed,
+                      strategy=strategy)

@@ -35,11 +35,10 @@ def _net_segment_delays(res: RoutingResources, tree: Dict[int, int],
         regs = 0
         for a, b in zip(path, path[1:]):
             nb = res.nodes[b]
-            k = nb.fan_in.index(res.nodes[a])
             if nb.kind == NodeKind.REGISTER:
                 regs += 1
                 d = 0.0                      # path cut
-            d += nb.delay + nb.edge_delay_in[k]
+            d += nb.delay + res.edge_delay_map[(a, b)]
         out[sink] = (d, regs)
     return out
 

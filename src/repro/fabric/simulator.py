@@ -89,7 +89,8 @@ class AppEmulator:
 def run_apps_batch(emulators: Sequence[AppEmulator],
                    inputs_list: Sequence[Dict[Tuple[int, int], np.ndarray]],
                    cycles: int,
-                   shard: Optional[bool] = None
+                   shard: Optional[bool] = None,
+                   io_chunk: Optional[int] = None
                    ) -> List[Dict[Tuple[int, int], np.ndarray]]:
     """Emulate several routed applications on the *same* fabric as one
     batch: all configs/PE programs/IO streams advance together through a
@@ -101,7 +102,10 @@ def run_apps_batch(emulators: Sequence[AppEmulator],
     max — so this is bit-identical to ``[e.run(i, cycles) for e, i in
     zip(...)]`` while compiling one program for the whole batch — the DSE
     bulk-evaluation path. ``shard`` forwards to ``run_batch``: the app
-    axis is split across devices when more than one is visible."""
+    axis is split across devices when more than one is visible.
+    ``io_chunk`` forwards too: on the Pallas fused engine, long stimulus
+    traces stream from HBM in chunks of that many cycles instead of
+    materializing (B, T, io) next to the value matrices."""
     if not emulators:
         return []
     fab = emulators[0].fabric
@@ -115,6 +119,6 @@ def run_apps_batch(emulators: Sequence[AppEmulator],
     depths = np.array([e.depth for e in emulators], dtype=np.int32)
     obs = np.asarray(fab.run_batch(configs, jnp.asarray(ext),
                                    pe_cfgs=pe_cfgs, depth=depths,
-                                   shard=shard))
+                                   shard=shard, io_chunk=io_chunk))
     return [{c: obs[b, :, i] for c, i in e.io_index.items()}
             for b, e in enumerate(emulators)]

@@ -16,6 +16,18 @@ Three kernels share that structure:
     One sweep, B configurations (bitstream-major layout): the value matrix
     is blocked over configs, the shared fan-in table over nodes.
 
+``fabric_fused_run``
+    The streamed multi-cycle engine: a whole *T-cycle emulation* runs in
+    one kernel invocation, with the external IO stream gridded over
+    ``chunk``-cycle blocks so only ``(FUSED_LANES, chunk, io)`` of the
+    ``(B, T, io)`` stimulus ever sits in VMEM — the rest stays in HBM and
+    streams in per grid step (long traces no longer materialize next to
+    the value matrices). Register/memory state lives in a
+    ``(FUSED_LANES, S)`` state-vector output that persists across the
+    (sequential) T-chunk grid steps and re-initializes when a new lane
+    block starts; per cycle the pinned sources are gathered scatter-free
+    out of that state vector through a node→state index map (``pin_src``).
+
 ``fabric_fused_batch``
     The fused batched engine: the *entire* fixpoint (``max_depth`` sweeps)
     for a block of ``FUSED_LANES`` configurations runs inside a single
@@ -334,3 +346,208 @@ def _fabric_fused_batch_jit(vals0: jnp.ndarray, sel: jnp.ndarray,
       imm_val_p, src_p, keep_p, pin_mask_p, jnp.asarray(pe_in),
       pe_res_idx_p)
     return out[:b, :n]
+
+
+def _fused_run_kernel(depths_ref, sel_ref, op_ref, const_ref, imm_mask_ref,
+                      imm_val_ref, ext_ref, src_ref, keep_ref, pin_mask_ref,
+                      pin_src_ref, pe_in_ref, pe_res_idx_ref, reg_src_ref,
+                      mem_in_ref, io_out_ref, obs_ref, state_ref, *,
+                      max_depth: int, word: int, chunk: int, n_reg: int,
+                      n_io: int, n_mem: int):
+    """One grid step: FUSED_LANES configurations x ``chunk`` fabric cycles.
+
+    The state vector (per lane) is laid out ``[regs | ext io | mem | 0]``;
+    ``pin_src`` maps every pinned node into it, so per-cycle re-pinning is
+    a gather (scatter-free, like the PE result placement). The state
+    output block is pinned to t-block 0, so it survives the sequential
+    walk over T chunks and is zeroed whenever a new lane block begins."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _reset_state():
+        state_ref[...] = jnp.zeros_like(state_ref[...])
+
+    src = src_ref[...]                              # (NP, F)
+    keep = keep_ref[...]                            # (NP,)
+    pin_mask = pin_mask_ref[...]                    # (NP,)
+    pin_src = pin_src_ref[...]                      # (NP,)
+    pe_in = pe_in_ref[...]                          # (P, 4)
+    pe_res_idx = pe_res_idx_ref[...]                # (NP,)
+    reg_src = reg_src_ref[...]                      # (Rp,)
+    mem_in = mem_in_ref[...]                        # (Mp,)
+    io_out = io_out_ref[...]                        # (IOp,)
+    np_, f = src.shape
+    p = pe_in.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (np_, 1), 0)[:, 0] * f
+    src_flat = src.reshape(-1)
+    pe_in_flat = pe_in.reshape(-1)
+    is_pe_out = pe_res_idx < 2 * p
+
+    def lane(b, carry):
+        sel = sel_ref[b, :]
+        op = op_ref[b, :]
+        const = const_ref[b, :]
+        imm_mask = imm_mask_ref[b, :, :]
+        imm_val = imm_val_ref[b, :, :]
+        d = depths_ref[b]
+        ext = ext_ref[b, :, :]                      # (chunk, IOp)
+        picked = jnp.take(src_flat, rows + sel)
+
+        def cycle(c, st):
+            if n_io:
+                ext_c = jax.lax.dynamic_index_in_dim(ext, c, axis=0,
+                                                     keepdims=False)
+                st = st.at[n_reg:n_reg + n_io].set(ext_c[:n_io])
+            pinned = jnp.take(st, pin_src)          # (NP,)
+            v0 = jnp.where(pin_mask > 0, pinned, 0)
+
+            def sweep(s, v):
+                nv = jnp.take(v, picked)
+                nv = jnp.where(keep > 0, v, nv)
+                nv = jnp.where(pin_mask > 0, pinned, nv)
+                ins = jnp.take(nv, pe_in_flat).reshape(p, 4)
+                ins = jnp.where(imm_mask > 0, imm_val, ins)
+                a_, b_, c_ = ins[:, 0], ins[:, 1], ins[:, 2]
+                cand = pe_alu_candidates(a_, b_, c_, const)
+                res0 = jnp.take_along_axis(cand, op[None, :],
+                                           axis=0)[0] & word
+                res1 = a_ & word
+                res = jnp.concatenate(
+                    [jnp.stack([res0, res1], axis=1).reshape(-1),
+                     jnp.zeros(1, jnp.int32)])
+                nv = jnp.where(is_pe_out, jnp.take(res, pe_res_idx), nv)
+                return jnp.where(s < d, nv, v)
+
+            v = jax.lax.fori_loop(0, max_depth, sweep, v0)
+            obs_ref[b, c, :] = jnp.take(v, io_out)
+            if n_reg:
+                st = st.at[0:n_reg].set(jnp.take(v, reg_src)[:n_reg])
+            if n_mem:
+                st = st.at[n_reg + n_io:n_reg + n_io + n_mem].set(
+                    jnp.take(v, mem_in)[:n_mem])
+            return st
+
+        state_ref[b, :] = jax.lax.fori_loop(0, chunk, cycle,
+                                            state_ref[b, :])
+        return carry
+
+    jax.lax.fori_loop(0, FUSED_LANES, lane, 0)
+
+
+def fabric_fused_run(sel: jnp.ndarray, ext: jnp.ndarray,
+                     depths: jnp.ndarray, op: jnp.ndarray,
+                     const: jnp.ndarray, imm_mask: jnp.ndarray,
+                     imm_val: jnp.ndarray, src: jnp.ndarray,
+                     keep: jnp.ndarray, pin_mask: jnp.ndarray,
+                     pin_src: jnp.ndarray, pe_in: jnp.ndarray,
+                     pe_res_idx: jnp.ndarray, reg_src: jnp.ndarray,
+                     mem_in: jnp.ndarray, io_out: jnp.ndarray,
+                     n_reg: int, n_io: int, n_mem: int, max_depth: int,
+                     chunk: int = 8, word: int = 0xFFFF,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Streamed fused emulation: T cycles in one kernel, ext-IO from HBM.
+
+    sel: (B, N) mux selects; ext: (B, T, n_io) stimulus (streamed in
+    ``chunk``-cycle grid blocks); depths: (B,) per-lane sweep counts;
+    op/const: (B, P); imm_mask/imm_val: (B, P, 4); src/keep/pin_mask/
+    pe_res_idx as in ``fabric_fused_batch``; pin_src: (N,) node → state
+    slot ([regs | io | mem | zero] layout); reg_src: (R,) node feeding
+    each register; mem_in: (M,); io_out: (n_io,) observed port nodes.
+    Returns (B, T, n_io) observations, bit-identical to scanning
+    ``fabric_fused_batch`` cycle by cycle. ``interpret=None`` resolves
+    from the backend per call."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fabric_fused_run_jit(sel, ext, depths, op, const, imm_mask,
+                                 imm_val, src, keep, pin_mask, pin_src,
+                                 pe_in, pe_res_idx, reg_src, mem_in,
+                                 io_out, n_reg, n_io, n_mem, max_depth,
+                                 chunk, word, interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_reg", "n_io", "n_mem", "max_depth",
+                                    "chunk", "word", "interpret"))
+def _fabric_fused_run_jit(sel: jnp.ndarray, ext: jnp.ndarray,
+                          depths: jnp.ndarray, op: jnp.ndarray,
+                          const: jnp.ndarray, imm_mask: jnp.ndarray,
+                          imm_val: jnp.ndarray, src: jnp.ndarray,
+                          keep: jnp.ndarray, pin_mask: jnp.ndarray,
+                          pin_src: jnp.ndarray, pe_in: jnp.ndarray,
+                          pe_res_idx: jnp.ndarray, reg_src: jnp.ndarray,
+                          mem_in: jnp.ndarray, io_out: jnp.ndarray,
+                          n_reg: int, n_io: int, n_mem: int,
+                          max_depth: int, chunk: int, word: int,
+                          interpret: bool) -> jnp.ndarray:
+    b, n = sel.shape
+    t_len = ext.shape[1]
+    f = src.shape[1]
+    p = pe_in.shape[0]
+    bb = FUSED_LANES
+    tc = max(1, chunk)
+    b_pad = pl.cdiv(max(b, 1), bb) * bb
+    t_pad = pl.cdiv(max(t_len, 1), tc) * tc
+    n_pad = pl.cdiv(n + 1, 128) * 128               # index N = zero sentinel
+    io_p = pl.cdiv(max(n_io, 1), 128) * 128
+    s_len = n_reg + n_io + n_mem + 1                # trailing zero slot
+    s_pad = pl.cdiv(s_len, 128) * 128
+    r_p = pl.cdiv(max(n_reg, 1), 128) * 128
+    m_p = pl.cdiv(max(n_mem, 1), 128) * 128
+    db, dn = b_pad - b, n_pad - n
+    sel_p = jnp.pad(sel, ((0, db), (0, dn)))
+    ext_p = jnp.pad(ext.astype(jnp.int32),
+                    ((0, db), (0, t_pad - t_len), (0, io_p - n_io)))
+    depths_p = jnp.pad(depths.astype(jnp.int32), (0, db))
+    op_p = jnp.pad(op, ((0, db), (0, 0)))
+    const_p = jnp.pad(const, ((0, db), (0, 0)))
+    imm_mask_p = jnp.pad(imm_mask, ((0, db), (0, 0), (0, 0)))
+    imm_val_p = jnp.pad(imm_val, ((0, db), (0, 0), (0, 0)))
+    src_p = jnp.pad(src, ((0, dn), (0, 0)), constant_values=n)
+    keep_p = jnp.pad(keep, (0, dn), constant_values=1)
+    pin_mask_p = jnp.pad(pin_mask, (0, dn))
+    pin_src_p = jnp.pad(pin_src, (0, dn), constant_values=s_len - 1)
+    pe_res_idx_p = jnp.pad(pe_res_idx, (0, dn), constant_values=2 * p)
+    # node-space sentinel n: vals[n] is 0 (padded region holds zeros)
+    reg_src_p = jnp.pad(reg_src, (0, r_p - reg_src.shape[0]),
+                        constant_values=n)
+    mem_in_p = jnp.pad(mem_in, (0, m_p - mem_in.shape[0]),
+                       constant_values=n)
+    io_out_p = jnp.pad(io_out, (0, io_p - io_out.shape[0]),
+                       constant_values=n)
+    grid = (b_pad // bb, t_pad // tc)
+    obs, _state = pl.pallas_call(
+        functools.partial(_fused_run_kernel, max_depth=max_depth,
+                          word=word, chunk=tc, n_reg=n_reg, n_io=n_io,
+                          n_mem=n_mem),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i, j: (i,)),            # depths
+            pl.BlockSpec((bb, n_pad), lambda i, j: (i, 0)),    # sel
+            pl.BlockSpec((bb, p), lambda i, j: (i, 0)),        # op
+            pl.BlockSpec((bb, p), lambda i, j: (i, 0)),        # const
+            pl.BlockSpec((bb, p, 4), lambda i, j: (i, 0, 0)),  # imm_mask
+            pl.BlockSpec((bb, p, 4), lambda i, j: (i, 0, 0)),  # imm_val
+            pl.BlockSpec((bb, tc, io_p), lambda i, j: (i, j, 0)),  # ext
+            pl.BlockSpec((n_pad, f), lambda i, j: (0, 0)),     # src
+            pl.BlockSpec((n_pad,), lambda i, j: (0,)),         # keep
+            pl.BlockSpec((n_pad,), lambda i, j: (0,)),         # pin_mask
+            pl.BlockSpec((n_pad,), lambda i, j: (0,)),         # pin_src
+            pl.BlockSpec((p, 4), lambda i, j: (0, 0)),         # pe_in
+            pl.BlockSpec((n_pad,), lambda i, j: (0,)),         # pe_res_idx
+            pl.BlockSpec((r_p,), lambda i, j: (0,)),           # reg_src
+            pl.BlockSpec((m_p,), lambda i, j: (0,)),           # mem_in
+            pl.BlockSpec((io_p,), lambda i, j: (0,)),          # io_out
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, tc, io_p), lambda i, j: (i, j, 0)),  # obs
+            pl.BlockSpec((bb, s_pad), lambda i, j: (i, 0)),    # state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, t_pad, io_p), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad, s_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(depths_p, sel_p, op_p, const_p, imm_mask_p, imm_val_p, ext_p,
+      src_p, keep_p, pin_mask_p, pin_src_p, jnp.asarray(pe_in),
+      pe_res_idx_p, reg_src_p, mem_in_p, io_out_p)
+    return obs[:b, :t_len, :n_io]

@@ -12,14 +12,24 @@ for a *batch* of nets b at once. ``w`` is the dense inf-padded adjacency
 of the coarse routing graph (tiles, not IR nodes: N = W*H <= 4096, so the
 dense tile fits VMEM in 128x128 blocks). Iterating to fixpoint yields all
 shortest path costs (Bellman-Ford over the tropical semiring); the
-PathFinder outer loop then uses these costs as its A* lower bounds /
-batched wavefronts.
+PathFinder outer loop (``repro.core.pnr.route``, ``strategy="minplus"``)
+uses these cost fields as its batched A* lower bounds.
 
-Validated in interpret mode against ``ref.minplus_ref``.
+``minplus_wavefront`` is the router-facing entry point: it relaxes in
+device-side blocks and stops as soon as the field stops changing, so the
+iteration count adapts to the graph diameter instead of paying the full
+Bellman-Ford ``N - 1`` bound. ``engine="auto"`` runs the Pallas kernel
+where it compiles (TPU) and the jitted dense reference elsewhere — the
+same dispatch convention as the fabric kernels.
+
+Validated in interpret mode against ``ref.minplus_ref`` /
+``ref.minplus_fixpoint_ref`` and against host Dijkstra in
+``tests/test_route_minplus.py``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +37,13 @@ from jax.experimental import pallas as pl
 
 BLOCK = 128
 INF = jnp.float32(3.0e38) / 4
+
+
+def _default_interpret() -> bool:
+    """Compiled on TPU, interpret elsewhere — resolved per call (mirrors
+    ``fabric_step._default_interpret``; a mid-process backend swap must
+    not see a stale value)."""
+    return jax.default_backend() != "tpu"
 
 
 def _minplus_kernel(d_ref, w_ref, out_ref):
@@ -82,3 +99,49 @@ def minplus_fixpoint(d0: jnp.ndarray, w: jnp.ndarray, iters: int,
         return minplus_step(d, w, interpret=interpret)
 
     return jax.lax.fori_loop(0, iters, body, d0)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _ref_block(d: jnp.ndarray, w: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """``iters`` dense relaxations of the pure-jnp oracle under one jit."""
+
+    def body(_, dd):
+        return jnp.minimum(dd, jnp.min(dd[:, :, None] + w[None], axis=1))
+
+    return jax.lax.fori_loop(0, iters, body, d)
+
+
+def minplus_wavefront(d0: jnp.ndarray, w: jnp.ndarray,
+                      block_iters: int = 8,
+                      engine: str = "auto",
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Relax ``d0`` to the true shortest-path fixpoint, adaptively.
+
+    Runs ``block_iters`` relaxations per device dispatch and stops when a
+    block leaves the field unchanged (a min-plus fixpoint is stable, so
+    one unchanged block proves convergence); a cap of ``N - 1`` total
+    relaxations preserves the Bellman-Ford bound on adversarial graphs.
+
+    engine: ``"pallas"`` forces the blocked kernel, ``"ref"`` the jitted
+    dense reference, ``"auto"`` picks the kernel only where it compiles
+    (TPU) — on interpret-mode hosts the reference is the faster exact
+    implementation of the same contract.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if engine not in ("auto", "pallas", "ref"):
+        raise ValueError(f"unknown minplus engine {engine!r}")
+    use_kernel = engine == "pallas" or (engine == "auto" and not interpret)
+    d = jnp.asarray(d0, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    n = w.shape[0]
+    max_blocks = max(1, -(-max(n - 1, 1) // block_iters))
+    for _ in range(max_blocks):
+        if use_kernel:
+            nd = minplus_fixpoint(d, w, block_iters, interpret=interpret)
+        else:
+            nd = _ref_block(d, w, block_iters)
+        if bool(jnp.array_equal(nd, d)):
+            return nd
+        d = nd
+    return d

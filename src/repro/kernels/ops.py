@@ -43,6 +43,25 @@ def fabric_fused_batch(vals0: jnp.ndarray, sel: jnp.ndarray,
         word=word, interpret=_interpret())
 
 
+def fabric_fused_run(sel: jnp.ndarray, ext: jnp.ndarray,
+                     depths: jnp.ndarray, op: jnp.ndarray,
+                     const: jnp.ndarray, imm_mask: jnp.ndarray,
+                     imm_val: jnp.ndarray, src: jnp.ndarray,
+                     keep: jnp.ndarray, pin_mask: jnp.ndarray,
+                     pin_src: jnp.ndarray, pe_in: jnp.ndarray,
+                     pe_res_idx: jnp.ndarray, reg_src: jnp.ndarray,
+                     mem_in: jnp.ndarray, io_out: jnp.ndarray,
+                     n_reg: int, n_io: int, n_mem: int, max_depth: int,
+                     chunk: int = 8, word: int = 0xFFFF) -> jnp.ndarray:
+    """Streamed fused emulation: T cycles in one kernel, ext-IO gridded
+    from HBM in ``chunk``-cycle blocks."""
+    return _fabric.fabric_fused_run(
+        sel, ext, depths, op, const, imm_mask, imm_val, src, keep,
+        pin_mask, pin_src, pe_in, pe_res_idx, reg_src, mem_in, io_out,
+        n_reg=n_reg, n_io=n_io, n_mem=n_mem, max_depth=max_depth,
+        chunk=chunk, word=word, interpret=_interpret())
+
+
 def hpwl(pins: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return _hpwl.hpwl(pins, mask, interpret=_interpret())
 
@@ -54,6 +73,15 @@ def minplus_step(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 def minplus_fixpoint(d0: jnp.ndarray, w: jnp.ndarray,
                      iters: int) -> jnp.ndarray:
     return _minplus.minplus_fixpoint(d0, w, iters, interpret=_interpret())
+
+
+def minplus_wavefront(d0: jnp.ndarray, w: jnp.ndarray,
+                      engine: str = "auto") -> jnp.ndarray:
+    """Converged batched shortest-path cost fields (the router's batched
+    wavefront engine): Pallas kernel on TPU, jitted dense reference
+    elsewhere."""
+    return _minplus.minplus_wavefront(d0, w, engine=engine,
+                                      interpret=_interpret())
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

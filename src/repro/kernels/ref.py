@@ -76,6 +76,17 @@ def minplus_ref(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return jnp.minimum(d, jnp.min(d[:, :, None] + w[None], axis=1))
 
 
+def minplus_fixpoint_ref(d0: jnp.ndarray, w: jnp.ndarray,
+                         iters: int) -> jnp.ndarray:
+    """``iters`` tropical relaxations — the contract of the blocked
+    kernel's fixpoint loop (and of ``minplus_wavefront`` once ``iters``
+    reaches the Bellman-Ford bound)."""
+    d = d0
+    for _ in range(iters):
+        d = minplus_ref(d, w)
+    return d
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True) -> jnp.ndarray:
     """Naive softmax attention. q: (BH, Sq, D), k/v: (BH, Skv, D)."""

@@ -153,6 +153,96 @@ def test_run_apps_batch_rejects_mixed_fabrics(small_ic, fabric):
         run_apps_batch([e1, e2], [{}, {}], 4)
 
 
+@pytest.mark.parametrize("chunk", [1, 4, 16])
+def test_run_batch_io_chunk_streams_bit_identically(small_ic, chunk):
+    """The streamed fused kernel (ext-IO gridded from HBM in chunk-cycle
+    blocks, register/mem state carried across grid steps) must be
+    bit-identical to the per-cycle scan — including T not divisible by
+    the chunk and per-config computed depths."""
+    fab = compile_interconnect(small_ic, use_pallas=True)
+    cfgs, ext = _random_cases(fab, b=3, t=7)
+    base = np.asarray(fab.run_batch(jnp.asarray(cfgs), jnp.asarray(ext),
+                                    depth=8))
+    stream = np.asarray(fab.run_batch(jnp.asarray(cfgs), jnp.asarray(ext),
+                                      depth=8, io_chunk=chunk))
+    np.testing.assert_array_equal(base, stream)
+
+
+def test_run_batch_io_chunk_streams_mem_state_bit_identically():
+    """Memory cores exercise the third state region of the streamed
+    kernel (mem_out pin slots, mem_in gather): a mem-bearing fabric must
+    stream bit-identically to the per-cycle scan too."""
+    ic = create_uniform_interconnect(width=4, height=4, num_tracks=2,
+                                     sb_type="wilton", io_ring=True,
+                                     reg_density=1.0, mem_columns=(2,))
+    fab = compile_interconnect(ic, use_pallas=True)
+    assert fab.num_mem > 0
+    cfgs, ext = _random_cases(fab, b=3, t=9)
+    base = np.asarray(fab.run_batch(jnp.asarray(cfgs), jnp.asarray(ext),
+                                    depth=8))
+    stream = np.asarray(fab.run_batch(jnp.asarray(cfgs), jnp.asarray(ext),
+                                      depth=8, io_chunk=4))
+    np.testing.assert_array_equal(base, stream)
+
+
+def test_run_batch_io_chunk_ignored_on_reference_engine(small_ic, fabric):
+    """Without the Pallas engine there is nothing to stream: io_chunk is
+    accepted and ignored (the scan already leaves the trace off-chip)."""
+    cfgs, ext = _random_cases(fabric, b=2, t=5)
+    a = np.asarray(fabric.run_batch(jnp.asarray(cfgs), jnp.asarray(ext),
+                                    depth=8))
+    b = np.asarray(fabric.run_batch(jnp.asarray(cfgs), jnp.asarray(ext),
+                                    depth=8, io_chunk=4))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_run_apps_batch_io_chunk_matches(small_ic):
+    """run_apps_batch forwards io_chunk; routed-app emulation streamed
+    from HBM stays bit-identical to the unstreamed batch."""
+    from repro.fabric import AppEmulator, run_apps_batch
+
+    fab = compile_interconnect(small_ic, use_pallas=True)
+    e1 = AppEmulator(fab, _east_route(small_ic, y=1), pe_ops={})
+    e2 = AppEmulator(fab, _east_route(small_ic, y=2), pe_ops={})
+    T = 9
+    i1 = {(0, 1): np.arange(10, 10 + T, dtype=np.int32)}
+    i2 = {(0, 2): np.arange(50, 50 + T, dtype=np.int32)}
+    plain = run_apps_batch([e1, e2], [i1, i2], T)
+    streamed = run_apps_batch([e1, e2], [i1, i2], T, io_chunk=4)
+    for got, want in zip(streamed, plain):
+        for coord in want:
+            np.testing.assert_array_equal(got[coord], want[coord])
+
+
+def test_pipelined_emulation_matches_inline():
+    """The async PnR/emulation pipeline (deferred per-device dispatch,
+    futures joined before records return) must produce the same records
+    as inline emulation, emulation report included."""
+    from repro.core.dse import SweepExecutor
+    from repro.core.pnr.app import app_pointwise
+
+    kw1 = dict(width=6, height=6, num_tracks=4, io_ring=True,
+               reg_density=1.0)
+    kw2 = dict(width=6, height=6, num_tracks=3, io_ring=True,
+               reg_density=1.0)
+    points = [(kw1, {"num_tracks": 4}), (kw2, {"num_tracks": 3})]
+    recs = {}
+    for pipelined in (False, True):
+        ex = SweepExecutor(apps={"pw1": lambda: app_pointwise(1)},
+                           sa_steps=20, sa_batch=8, emulate_cycles=8,
+                           use_pallas=False, max_workers=2,
+                           pipeline_emulation=pipelined)
+        recs[pipelined] = ex.run_points(points)
+        assert not ex._pending          # all futures joined
+    for sync_rec, async_rec in zip(recs[False], recs[True]):
+        a, b = sync_rec["apps"]["pw1"], async_rec["apps"]["pw1"]
+        assert a["success"] and b["success"]
+        assert "emulation" in a and "emulation" in b
+        assert a["emulation"]["out_checksum"] == \
+            b["emulation"]["out_checksum"]
+        assert a["emulation"]["depth"] == b["emulation"]["depth"]
+
+
 def test_sweep_executor_point_with_batched_emulation(tmp_path):
     """One design point end to end on the executor: PnR, shared caches,
     batched emulation report, JSON persistence."""

@@ -113,6 +113,26 @@ def test_minplus_fixpoint_is_shortest_path():
     np.testing.assert_allclose(out[0], np.arange(n, dtype=np.float32))
 
 
+@pytest.mark.parametrize("engine", ["pallas", "ref"])
+def test_minplus_wavefront_converges_to_bellman_ford(engine):
+    """The adaptive wavefront (early-exit blocks) equals the full
+    Bellman-Ford bound on a random sparse graph, on both engines."""
+    from repro.kernels.minplus import minplus_wavefront
+
+    n, b = 96, 3
+    rng = np.random.default_rng(7)
+    w = np.where(rng.random((n, n)) < 0.06, rng.random((n, n)) * 3 + 0.1,
+                 3e37).astype(np.float32)
+    np.fill_diagonal(w, 0.0)
+    d0 = np.full((b, n), 3e37, np.float32)
+    d0[np.arange(b), [0, 5, 11]] = 0.0
+    got = np.asarray(minplus_wavefront(jnp.asarray(d0), jnp.asarray(w),
+                                       engine=engine, interpret=True))
+    want = np.asarray(ref.minplus_fixpoint_ref(jnp.asarray(d0),
+                                               jnp.asarray(w), n - 1))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
 @pytest.mark.parametrize("sq,skv,hq,hkv,dtype", [
     (128, 128, 4, 4, jnp.float32),
     (200, 200, 4, 2, jnp.float32),
