@@ -1,8 +1,7 @@
 """Fig. 10 — SB and CB area vs number of routing tracks (area only)."""
 from __future__ import annotations
 
-from repro.core.area import connection_box_area, switch_box_area
-from repro.core.edsl import create_uniform_interconnect
+import canal
 
 from .common import emit, save_json, timed
 
@@ -12,12 +11,10 @@ def run(quick: bool = False):
     recs = []
 
     def build():
-        for t in tracks:
-            ic = create_uniform_interconnect(width=8, height=8,
-                                             num_tracks=t, reg_density=1.0)
-            recs.append({"num_tracks": t,
-                         "sb_area": switch_box_area(ic),
-                         "cb_area": connection_box_area(ic)})
+        base = canal.InterconnectSpec(width=8, height=8, reg_density=1.0)
+        for spec, extra in canal.spec_grid(base, {"num_tracks": tracks}):
+            fab = canal.compile(spec)
+            recs.append({**extra, **fab.area()})
         return recs
 
     _, us = timed(build)

@@ -2,8 +2,7 @@
 (Fig. 12 reduction: 4 -> 3 (drop east) -> 2 (drop south))."""
 from __future__ import annotations
 
-from repro.core.area import connection_box_area, switch_box_area
-from repro.core.edsl import create_uniform_interconnect
+import canal
 
 from .common import emit, save_json, timed
 
@@ -12,16 +11,14 @@ def run(quick: bool = False):
     recs = []
 
     def build():
+        base = canal.InterconnectSpec(width=8, height=8, num_tracks=5,
+                                      reg_density=1.0)
         for kind in ("sb", "cb"):
-            for sides in (4, 3, 2):
-                kw = {f"{kind}_sides": sides}
-                ic = create_uniform_interconnect(width=8, height=8,
-                                                 num_tracks=5,
-                                                 reg_density=1.0, **kw)
-                recs.append({
-                    "kind": kind, "sides": sides,
-                    "sb_area": switch_box_area(ic),
-                    "cb_area": connection_box_area(ic)})
+            axis = f"{kind}_sides"
+            for spec, _ in canal.spec_grid(base, {axis: (4, 3, 2)}):
+                fab = canal.compile(spec)
+                recs.append({"kind": kind, "sides": getattr(spec, axis),
+                             **fab.area()})
         return recs
 
     _, us = timed(build)

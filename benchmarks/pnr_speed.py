@@ -24,17 +24,17 @@ def _route_workload(width: int, height: int, num_tracks: int,
                     app_names: List[str]):
     """Shared fixture: interconnect, resources, and packed+placed apps
     (placement runs once — the benchmark times *routing* only)."""
-    from repro.core.edsl import SwitchBoxType, create_uniform_interconnect
+    from repro.core.passes import PassManager
     from repro.core.pnr.app import BENCH_APPS
     from repro.core.pnr.detailed_place import detailed_place
     from repro.core.pnr.global_place import assign_ios, global_place, legalize
     from repro.core.pnr.packing import pack
     from repro.core.pnr.route import RoutingResources
+    from repro.core.spec import InterconnectSpec, SwitchBoxType
 
-    ic = create_uniform_interconnect(width=width, height=height,
-                                     num_tracks=num_tracks, io_ring=True,
-                                     sb_type=SwitchBoxType.WILTON,
-                                     reg_density=1.0)
+    ic = PassManager().run(InterconnectSpec(
+        width=width, height=height, num_tracks=num_tracks, io_ring=True,
+        sb_type=SwitchBoxType.WILTON, reg_density=1.0))
     res = RoutingResources(ic)
     placed = []
     for name in app_names:
@@ -88,12 +88,14 @@ def sweep_speed(quick: bool = False) -> Dict:
     emulation pipeline on): the router win at the DSE-sweep level."""
     from repro.core.dse import SweepExecutor
     from repro.core.pnr.app import BENCH_APPS
+    from repro.core.spec import InterconnectSpec, spec_grid
 
     apps = {k: BENCH_APPS[k] for k in
             (("fir",) if quick else ("fir", "tree_reduce"))}
     tracks = (5,) if quick else (4, 5)
-    points = [(dict(width=8, height=8, num_tracks=t, io_ring=True,
-                    reg_density=1.0), {"num_tracks": t}) for t in tracks]
+    base = InterconnectSpec(width=8, height=8, io_ring=True,
+                            reg_density=1.0)
+    points = spec_grid(base, {"num_tracks": tracks})
     rec: Dict = {"tracks": list(tracks), "apps": list(apps)}
     for strategy in ("python", "minplus"):
         ex = SweepExecutor(apps=apps, sa_steps=30, sa_batch=8,

@@ -7,9 +7,8 @@ path, and run the same Canal router on a TPU-pod traffic pattern
 """
 import numpy as np
 
-from repro.core.area import connection_box_area, switch_box_area
-from repro.core.dse import sweep_num_tracks, sweep_sb_topology
-from repro.core.edsl import SwitchBoxType
+import canal
+from repro.core.dse import SweepExecutor, sweep_sb_topology
 from repro.core.ici import pod_collective_model, route_traffic_canal
 from repro.core.pnr.app import app_butterfly
 
@@ -17,24 +16,27 @@ from repro.core.pnr.app import app_butterfly
 def main():
     print("== topology DSE (Wilton vs Disjoint, Fc=0.5) ==")
     recs = sweep_sb_topology(
-        (SwitchBoxType.WILTON, SwitchBoxType.DISJOINT),
+        (canal.SwitchBoxType.WILTON, canal.SwitchBoxType.DISJOINT),
         apps={"butterfly3": lambda: app_butterfly(3)},
         num_tracks=4, sa_steps=40, track_fc=0.5)
     for r in recs:
         print(f"  {r['topology']:9s} routed {r['n_routed']}/{r['n_apps']} "
               f"sb_area={r['sb_area']:.0f}um2")
 
-    print("== track-count DSE ==")
-    recs = sweep_num_tracks((2, 4, 6),
-                            apps={"butterfly3": lambda: app_butterfly(3)},
-                            sa_steps=40, track_fc=0.5)
+    print("== track-count DSE (declarative spec grid) ==")
+    base = canal.InterconnectSpec(width=8, height=8, io_ring=True,
+                                  reg_density=1.0, cb_track_fc=0.5,
+                                  sb_track_fc=0.5)
+    ex = SweepExecutor(apps={"butterfly3": lambda: app_butterfly(3)},
+                       sa_steps=40)
+    recs = ex.run_points(canal.spec_grid(base, {"num_tracks": (2, 4, 6)}))
     for r in recs:
         ok = [a for a in r["apps"].values() if a["success"]]
         crit = (sum(a["critical_path_ns"] for a in ok) / len(ok)
                 if ok else float("nan"))
         print(f"  tracks={r['num_tracks']} sb={r['sb_area']:.0f}um2 "
               f"cb={r['cb_area']:.0f}um2 routed={len(ok)} "
-              f"crit={crit:.2f}ns")
+              f"crit={crit:.2f}ns spec={r['spec_digest'][:10]}")
 
     print("== pod-fabric DSE (Canal router on the ICI torus) ==")
     rng = np.random.default_rng(0)

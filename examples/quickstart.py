@@ -1,50 +1,51 @@
-"""Quickstart: generate a CGRA interconnect with the Canal eDSL, place and
-route an application on it, generate the bitstream, and emulate the fabric.
+"""Quickstart: the Canal front door in five steps — describe an
+interconnect as a frozen spec, compile it through the pass pipeline,
+place and route an application, generate the bitstream, and emulate.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(The old imperative entry point, ``create_uniform_interconnect``, still
+works but is deprecated; it is a shim over this same pipeline.)
 """
 import numpy as np
 
-from repro.core.bitstream import BitstreamCodec
-from repro.core.edsl import create_uniform_interconnect
-from repro.core.lowering import compile_interconnect
-from repro.core.pnr import place_and_route
+import canal
 from repro.core.pnr.app import app_pointwise
-from repro.core.pnr.packing import pack
-from repro.fabric import AppEmulator
 
 
 def main():
-    # 1. the paper's Fig. 4 helper: a uniform Wilton interconnect
-    ic = create_uniform_interconnect(width=6, height=6, num_tracks=4,
-                                     sb_type="wilton", io_ring=True,
-                                     reg_density=1.0)
-    print(f"interconnect: {ic.num_nodes()} IR nodes, "
-          f"{ic.num_edges()} edges")
+    # 1. declare the design point: frozen, hashable, JSON-round-trippable
+    spec = canal.InterconnectSpec(width=6, height=6, num_tracks=4,
+                                  sb_type="wilton", io_ring=True,
+                                  reg_density=1.0)
+    print(f"spec: digest {spec.digest()[:16]}")
 
-    # 2. lower to the functional fabric (static backend)
-    fabric = compile_interconnect(ic)
-    print(f"fabric: {fabric.num_config} config registers")
+    # 2. compile: named IR passes -> CompiledFabric handle
+    fab = canal.compile(spec)
+    ic = fab.interconnect
+    print(f"interconnect: {ic.num_nodes()} IR nodes, {ic.num_edges()} "
+          f"edges via passes "
+          f"{[e['pass'] for e in fab.pass_log]}")
+    print(f"fabric: {fab.fabric().num_config} config registers, "
+          f"area {fab.area()['sb_area']:.0f} um2 (SB)")
 
     # 3. an application: out = ((in + 1) + 2) + 3
     app = app_pointwise(3)
-    packed = pack(app)
-    result = place_and_route(ic, app, alphas=(2.0,), sa_steps=60)
+    result = fab.place_and_route(app, alphas=(2.0,), sa_steps=60)
     assert result.success, result.error
     print(f"PnR: crit path {result.timing['critical_path_ns']:.2f} ns, "
           f"wirelength {result.wirelength}, "
-          f"{result.route_iterations} routing iterations")
+          f"{result.route_iterations} routing iterations "
+          f"(router: {result.route_strategy})")
 
     # 4. bitstream
-    codec = BitstreamCodec(fabric)
-    words = codec.words_for_route(result.route_edges())
+    words = fab.bitstream(result)
     print(f"bitstream: {len(words)} config words")
 
-    # 5. emulate
-    emu = AppEmulator.from_pnr(fabric, packed, result)
+    # 5. emulate (inputs keyed by app instance name or IO tile coord)
     T = 12
     x = np.arange(50, 50 + T).astype(np.int32)
-    outs = emu.run({result.placement["in0"]: x}, T)
+    outs = fab.emulate(result, {"in0": x}, cycles=T)
     y = outs[result.placement["out0"]]
     lat = np.nonzero(y)[0][0]
     print(f"emulation: in={x[:6]} -> out={y[lat:lat + 6]} "

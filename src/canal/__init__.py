@@ -1,0 +1,38 @@
+"""Canal's public front door.
+
+One import, two objects:
+
+    import canal
+
+    spec = canal.InterconnectSpec(width=8, height=8, num_tracks=5,
+                                  sb_type="wilton", io_ring=True)
+    fab = canal.compile(spec)            # pass pipeline -> CompiledFabric
+    result = fab.place_and_route(app)
+    outs = fab.emulate(result, {"in0": stream}, cycles=32)
+    words = fab.bitstream(result)
+    area = fab.area()
+
+``InterconnectSpec`` is frozen, hashable and JSON-round-trippable —
+``spec.digest()`` is the canonical design-point cache key. ``compile``
+runs the named IR passes (``materialize_tiles -> apply_sb_topology ->
+insert_pipeline_registers -> connect_core_ports ->
+readyvalid_transform? -> prune_dead_muxes -> freeze``); customize the
+pipeline via :class:`PassManager`. Sweeps are declarative grids:
+``spec_grid(base, {"num_tracks": (2, 4, 6)})`` feeds
+:class:`SweepExecutor.run_points`.
+
+Everything here re-exports from :mod:`repro.core`; the legacy
+``repro.core.edsl.create_uniform_interconnect`` entry point still works
+as a deprecation shim over the same pipeline.
+"""
+from repro.core.compile import CompiledFabric, compile_spec as compile  # noqa: F401,A001
+from repro.core.passes import (DEFAULT_PASSES, IRPass, PassContext,  # noqa: F401
+                               PassManager, ir_digest)
+from repro.core.spec import (InterconnectSpec, SwitchBoxType,  # noqa: F401
+                             sides_for, spec_from_kwargs, spec_grid)
+
+__all__ = [
+    "CompiledFabric", "compile", "DEFAULT_PASSES", "IRPass", "PassContext",
+    "PassManager", "ir_digest", "InterconnectSpec", "SwitchBoxType",
+    "sides_for", "spec_from_kwargs", "spec_grid",
+]

@@ -1,8 +1,12 @@
 """The paper's own artifact: an Amber-style CGRA interconnect config
 (32x32 array, five 16-bit tracks, Wilton SBs, MEM columns) — the Canal
 side of the framework. Not an LM; selected via the Canal DSE/benchmarks.
+
+Both configs are frozen :class:`InterconnectSpec` design points: hash them
+(``FULL.digest()``) to address caches, or compile them through the front
+door (``canal.compile(FULL)`` / :func:`compiled_smoke`).
 """
-from repro.core.edsl import InterconnectSpec, SwitchBoxType
+from repro.core.spec import InterconnectSpec, SwitchBoxType
 
 FULL = InterconnectSpec(
     width=32, height=32, track_width=16, num_tracks=5,
@@ -15,3 +19,9 @@ def smoke() -> InterconnectSpec:
     return InterconnectSpec(width=6, height=6, track_width=16, num_tracks=3,
                             sb_type=SwitchBoxType.WILTON, reg_density=1.0,
                             io_ring=True)
+
+
+def compiled_smoke(use_pallas: bool = False):
+    """The smoke design point through the compile front door."""
+    from repro.core.compile import compile_spec
+    return compile_spec(smoke(), use_pallas=use_pallas)

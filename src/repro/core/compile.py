@@ -1,0 +1,177 @@
+"""The compiled-design handle behind ``canal.compile``.
+
+``compile_spec(InterconnectSpec(...))`` (re-exported as ``canal.compile``)
+runs the pass pipeline and returns a :class:`CompiledFabric`: one object
+that owns the IR plus lazily-built, memoized backends —
+``place_and_route(app)``, ``emulate(...)``, ``area()``,
+``bitstream(cfg)``. Spec route knobs (``route_strategy``,
+``auto_min_tiles``) flow through automatically, and ``spec.digest()`` /
+``ir_digest()`` give the content addresses used for spec-keyed caching.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .graph import Interconnect, Node
+from .spec import InterconnectSpec
+
+Coord = Tuple[int, int]
+
+
+class CompiledFabric:
+    """A compiled interconnect design point.
+
+    Construction goes through :meth:`repro.core.passes.PassManager.compile`
+    (or the ``canal.compile`` / :func:`compile_spec` front door) — the
+    constructor only binds the already-compiled IR.
+    """
+
+    def __init__(self, spec: InterconnectSpec, ic: Interconnect,
+                 pass_log: Optional[List[Dict]] = None,
+                 use_pallas: bool = False, cacheable: bool = True):
+        self.spec = spec
+        self._ic = ic
+        self.pass_log = list(pass_log or [])
+        self.use_pallas = use_pallas
+        #: False when a custom (non-serializable) core_fn was injected:
+        #: the spec digest then under-describes the design, so
+        #: digest-keyed caches must not admit this fabric
+        self.cacheable = cacheable
+        self._fabrics: Dict[Tuple[bool, bool], object] = {}
+        self._resources: Dict[float, object] = {}
+        self._codec = None
+
+    # ------------------------------------------------------------- identity
+    @property
+    def interconnect(self) -> Interconnect:
+        return self._ic
+
+    def digest(self) -> str:
+        """The design point's content address (= ``spec.digest()``)."""
+        return self.spec.digest()
+
+    def ir_digest(self) -> str:
+        """Content hash of the compiled IR (see ``passes.ir_digest``)."""
+        from .passes import ir_digest
+        return ir_digest(self._ic)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        s = self.spec
+        return (f"CompiledFabric({s.width}x{s.height}, "
+                f"{s.num_tracks}x{s.track_width}b {s.sb_type.value}, "
+                f"digest={self.digest()[:12]})")
+
+    # ------------------------------------------------------------- backends
+    def fabric(self, use_pallas: Optional[bool] = None):
+        """The lowered functional model: :class:`FabricModule` for the
+        static interconnect, :class:`repro.fabric.RVFabric` when the spec
+        requests the hybrid ready-valid interconnect. Memoized per
+        (engine, rv) pair."""
+        up = self.use_pallas if use_pallas is None else use_pallas
+        key = (up, self.spec.ready_valid)
+        fab = self._fabrics.get(key)
+        if fab is None:
+            if self.spec.ready_valid:
+                from repro.fabric import RVFabric
+                # the readyvalid_transform pass annotated the IR; the
+                # lowering consumes that annotation, not the raw spec
+                mode = self._ic.params["rv_fifo_mode"]
+                fab = RVFabric(self._ic, fifo_mode=mode, use_pallas=up)
+            else:
+                from .lowering import FabricModule
+                fab = FabricModule(self._ic, use_pallas=up)
+            self._fabrics[key] = fab
+        return fab
+
+    def resources(self, reg_penalty: float = 4.0):
+        """Shared :class:`RoutingResources` (adjacency, base costs,
+        coarse graph), memoized per ``reg_penalty``."""
+        from .pnr.route import RoutingResources
+        key = float(reg_penalty)
+        res = self._resources.get(key)
+        if res is None:
+            res = RoutingResources(self._ic, reg_penalty=reg_penalty)
+            self._resources[key] = res
+        return res
+
+    # ------------------------------------------------------------------ PnR
+    def place_and_route(self, app, alphas: Sequence[float] = (1.0, 2.0, 4.0),
+                        sa_steps: int = 200, sa_batch: int = 32,
+                        seed: int = 0, reg_penalty: float = 4.0,
+                        route_strategy: Optional[str] = None,
+                        **kwargs):
+        """Pack, place and route ``app`` on this fabric (paper §3.4).
+        The spec's route knobs apply unless overridden per call."""
+        from .pnr import place_and_route as pnr
+        strategy = (route_strategy or self.spec.route_strategy or "auto")
+        return pnr(self._ic, app, alphas=alphas, sa_steps=sa_steps,
+                   sa_batch=sa_batch, seed=seed,
+                   resources=self.resources(reg_penalty),
+                   route_strategy=strategy,
+                   auto_min_tiles=self.spec.auto_min_tiles, **kwargs)
+
+    # ------------------------------------------------------------ emulation
+    def emulate(self, result, inputs: Dict[Union[str, Coord], np.ndarray],
+                cycles: int,
+                use_pallas: Optional[bool] = None) -> Dict[Coord,
+                                                           np.ndarray]:
+        """Emulate a routed application for ``cycles`` fabric clocks.
+
+        ``result`` is the :class:`PnRResult` from
+        :meth:`place_and_route`; ``inputs`` maps IO tiles — by ``(x, y)``
+        coordinate or by app instance name — to driven value streams.
+        Returns observed output streams keyed by IO tile coordinate."""
+        from repro.fabric import AppEmulator
+
+        if not result.success:
+            raise ValueError(f"cannot emulate failed PnR: {result.error}")
+        fab = self.fabric(use_pallas)
+        emu = AppEmulator.from_pnr(fab, result.packed, result)
+        ins: Dict[Coord, np.ndarray] = {}
+        for k, v in inputs.items():
+            coord = result.placement[k] if isinstance(k, str) else k
+            ins[coord] = np.asarray(v, dtype=np.int32)
+        return emu.run(ins, cycles)
+
+    # ----------------------------------------------------------------- PPA
+    def area(self) -> Dict[str, float]:
+        """Analytical GF12-calibrated area of the design point, in µm²
+        (ready-valid FIFO overhead included when the spec asks for it)."""
+        from .area import connection_box_area, switch_box_area
+        if self.spec.ready_valid:
+            rv = "split" if self.spec.split_fifo else "full"
+            sb = switch_box_area(self._ic, rv=rv)
+        else:
+            sb = switch_box_area(self._ic)
+        return {"sb_area": sb, "cb_area": connection_box_area(self._ic)}
+
+    # ------------------------------------------------------------ bitstream
+    def bitstream(self, cfg):
+        """Configuration words for ``cfg``: a :class:`PnRResult` (route
+        edges -> mux selects), a list of routed IR edges, or a raw
+        ``(num_config,)`` select vector."""
+        from .bitstream import BitstreamCodec
+        if self._codec is None:
+            self._codec = BitstreamCodec(self.fabric())
+        codec = self._codec
+        if hasattr(cfg, "route_edges"):
+            return codec.words_for_route(cfg.route_edges())
+        if (isinstance(cfg, (list, tuple)) and cfg
+                and isinstance(cfg[0], tuple)
+                and isinstance(cfg[0][0], Node)):
+            return codec.words_for_route(cfg)
+        return codec.encode(np.asarray(cfg, dtype=np.int32))
+
+
+def compile_spec(spec: InterconnectSpec, core_fn=None,
+                 use_pallas: bool = False,
+                 passes=None) -> CompiledFabric:
+    """The single front door (``canal.compile``): compile a declarative
+    :class:`InterconnectSpec` through the pass pipeline into a
+    :class:`CompiledFabric`. ``passes`` overrides the default pipeline
+    (a sequence of :class:`repro.core.passes.IRPass`)."""
+    from .passes import DEFAULT_PASSES, PassManager
+    pm = PassManager(DEFAULT_PASSES if passes is None else passes)
+    return pm.compile(spec, core_fn=core_fn, use_pallas=use_pallas)

@@ -14,6 +14,16 @@ batched Pallas kernel (PE cores evaluated in-kernel, per-app depth
 masking) when ``use_pallas=True``, sharded across devices when more than
 one is visible.
 
+Design points are :class:`repro.core.spec.InterconnectSpec` objects (legacy
+kwargs dicts are canonicalized into specs on entry), and every executor
+cache — interconnect, routing resources, lowered fabric — is keyed on
+``spec.hardware_digest()``: a serialization-stable content address of the
+hardware (execution knobs excluded, so e.g. router-strategy comparisons
+share compiled artifacts), instead of the old raw-kwargs tuples that broke
+on callables and nested values; records carry the full ``spec.digest()``.
+The ``sweep_*`` functions are declarative grids (``spec_grid``) over the
+one generic driver, :meth:`SweepExecutor.run_points`.
+
 Host PnR and device emulation are *pipelined*: with
 ``pipeline_emulation=True`` (default) a design point's emulation batch is
 dispatched asynchronously to a per-device emulation queue the moment its
@@ -31,9 +41,24 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .area import connection_box_area, switch_box_area
-from .edsl import SwitchBoxType, create_uniform_interconnect
 from .pnr import place_and_route
 from .pnr.app import BENCH_APPS
+from .spec import (InterconnectSpec, SwitchBoxType, spec_from_kwargs,
+                   spec_grid)
+
+def _as_spec(point) -> InterconnectSpec:
+    """Canonicalize a design point: an InterconnectSpec passes through, a
+    legacy kwargs dict is converted (rejecting non-serializable values
+    such as callables with an actionable error)."""
+    if isinstance(point, InterconnectSpec):
+        return point
+    if isinstance(point, dict):
+        return spec_from_kwargs(**point)
+    raise TypeError(
+        f"design point must be an InterconnectSpec or a kwargs dict, "
+        f"got {type(point).__name__}")
+
+
 
 
 class SweepExecutor:
@@ -89,15 +114,40 @@ class SweepExecutor:
 
     # ------------------------------------------------------------- caches
     @staticmethod
-    def _key(kwargs: Dict) -> Tuple:
-        return tuple(sorted((k, str(v)) for k, v in kwargs.items()))
+    def _key(point) -> Tuple:
+        """Canonical cache key for a design point (a spec, or a kwargs
+        dict canonicalized into one by :func:`_as_spec`).
 
-    def interconnect(self, **ic_kwargs):
-        key = self._key(ic_kwargs)
+        Keys on ``spec.hardware_digest()`` — stable across processes,
+        key orderings and value spellings, and shared across points that
+        differ only in execution knobs (route strategy etc.), since the
+        cached artifacts (IR, routing resources, lowered fabric) depend
+        only on the hardware. Callables and unknown kwargs are rejected
+        with an actionable error instead of the old silent ``str(fn)``
+        key (whose embedded ``0x...`` id changed every run) or a raw
+        ``TypeError``."""
+        return ("spec", _as_spec(point).hardware_digest())
+
+    def interconnect(self, spec=None, **ic_kwargs):
+        """The per-executor interconnect cache, keyed on the design
+        point's ``spec.hardware_digest()``. Accepts a spec positionally
+        or legacy generator kwargs.
+
+        The cached entry is compiled from ``spec.hardware_spec()`` —
+        execution knobs cleared — because it is shared across every
+        knob variant of the same hardware: the IR's own stamped identity
+        (``ic.params["spec_digest"]``, ``ic.spec``) must describe what
+        all of them have in common, not whichever variant got compiled
+        first."""
+        if spec is not None and ic_kwargs:
+            raise TypeError("pass either a spec or kwargs, not both")
+        spec = _as_spec(spec if spec is not None else ic_kwargs)
+        key = self._key(spec)
         with self._lock:
             ic = self._ic_cache.get(key)
         if ic is None:
-            ic = create_uniform_interconnect(**ic_kwargs)
+            from .passes import PassManager
+            ic = PassManager().run(spec.hardware_spec())
             with self._lock:
                 ic = self._ic_cache.setdefault(key, ic)
         return ic
@@ -153,14 +203,16 @@ class SweepExecutor:
         return self._emu_pool, dev
 
     def _submit_emulation(self, fab, routed: List[Tuple[str, Any, Any]],
-                          out: Dict[str, Dict]) -> Future:
+                          out: Dict[str, Dict],
+                          io_chunk: Optional[int] = None) -> Future:
         """Dispatch one design point's emulation batch asynchronously; the
         returned future merges the report into ``out`` when done. Router
         threads keep running while the device sweeps."""
         pool, dev = self._emu_queue()
 
         def work():
-            emu = self._emulate_batch(fab, routed, device=dev)
+            emu = self._emulate_batch(fab, routed, device=dev,
+                                      io_chunk=io_chunk)
             for name, info in emu.items():
                 out[name]["emulation"] = info
 
@@ -189,7 +241,8 @@ class SweepExecutor:
 
     # ----------------------------------------------------- point execution
     def _emulate_batch(self, fab, routed: List[Tuple[str, Any, Any]],
-                       device: Any = None) -> Dict[str, Dict]:
+                       device: Any = None,
+                       io_chunk: Optional[int] = None) -> Dict[str, Dict]:
         """Emulate all routed apps of one design point as a single batch.
 
         ``routed``: (name, packed, PnRResult) triples on ``fab``. Drives a
@@ -202,6 +255,8 @@ class SweepExecutor:
         import numpy as np
         from repro.fabric import AppEmulator, run_apps_batch
 
+        if io_chunk is None:
+            io_chunk = self.io_chunk
         emulators, inputs, names = [], [], []
         T = self.emulate_cycles
         for name, packed, result in routed:
@@ -218,10 +273,10 @@ class SweepExecutor:
             import jax
             with jax.default_device(device):
                 outs = run_apps_batch(emulators, inputs, T, shard=False,
-                                      io_chunk=self.io_chunk)
+                                      io_chunk=io_chunk)
         else:
             outs = run_apps_batch(emulators, inputs, T, shard=self.shard,
-                                  io_chunk=self.io_chunk)
+                                  io_chunk=io_chunk)
         report: Dict[str, Dict] = {}
         for name, emu, out in zip(names, emulators, outs):
             checksum = int(sum(int(np.asarray(v, np.int64).sum())
@@ -230,19 +285,26 @@ class SweepExecutor:
                             "out_checksum": checksum}
         return report
 
-    def run_point(self, ic_kwargs: Dict,
+    def run_point(self, point,
                   extra: Optional[Dict] = None,
                   defer_emulation: bool = False) -> Dict:
         """PnR every app on one design point; emit a sweep record.
+
+        ``point`` is an :class:`InterconnectSpec` (or a legacy kwargs
+        dict, canonicalized into one). Spec route/emulation knobs
+        (``route_strategy``, ``auto_min_tiles``, ``emulate_io_chunk``)
+        override the executor defaults for this point.
 
         ``defer_emulation`` dispatches the emulation batch to the async
         per-device queue instead of running it inline; the record's
         ``emulation`` entries appear once the future lands (callers join
         via :meth:`join_pending` — :meth:`run_points` does)."""
         t0 = time.perf_counter()
-        ic = self.interconnect(**ic_kwargs)
-        key = self._key(ic_kwargs)
+        spec = _as_spec(point)
+        ic = self.interconnect(spec)
+        key = self._key(spec)
         res = self.resources(ic, key)
+        strategy = spec.route_strategy or self.route_strategy
         out: Dict[str, Dict] = {}
         routed: List[Tuple[str, Any, Any]] = []
         for name, mk in self.apps.items():
@@ -251,7 +313,8 @@ class SweepExecutor:
                 ic, app, alphas=self.alphas, sa_steps=self.sa_steps,
                 sa_batch=self.sa_batch, resources=res, seed=self.seed,
                 split_fifo_ctrl_delay=self.split_fifo_ctrl_delay,
-                route_strategy=self.route_strategy)
+                route_strategy=strategy,
+                auto_min_tiles=spec.auto_min_tiles)
             out[name] = {
                 "success": r.success,
                 "critical_path_ns": r.timing.get("critical_path_ns",
@@ -260,19 +323,23 @@ class SweepExecutor:
                 "route_iterations": r.route_iterations,
                 "seconds": r.seconds,
                 "error": r.error,
+                # resolved engine ("auto" calibration data, ROADMAP item)
+                "route_strategy": r.route_strategy,
             }
             if r.success and self.emulate_cycles:
                 routed.append((name, r.packed, r))
         rec: Dict = dict(extra or {})
+        rec["spec_digest"] = spec.digest()
         rec["apps"] = out
         rec["sb_area"] = switch_box_area(ic)
         rec["cb_area"] = connection_box_area(ic)
         if routed:
             fab = self.fabric(ic, key)
+            io_chunk = spec.emulate_io_chunk or self.io_chunk
             if defer_emulation:
-                self._submit_emulation(fab, routed, out)
+                self._submit_emulation(fab, routed, out, io_chunk=io_chunk)
             else:
-                emu = self._emulate_batch(fab, routed)
+                emu = self._emulate_batch(fab, routed, io_chunk=io_chunk)
                 for name, info in emu.items():
                     out[name]["emulation"] = info
         # wall time includes interconnect generation (cache misses pay it,
@@ -281,9 +348,12 @@ class SweepExecutor:
         rec["gen_pnr_seconds"] = time.perf_counter() - t0
         return rec
 
-    def run_points(self, points: Sequence[Tuple[Dict, Dict]]) -> List[Dict]:
-        """Evaluate (ic_kwargs, extra) design points, concurrently when the
-        pool has more than one worker. Order of records matches ``points``.
+    def run_points(self, points: Sequence[Tuple[Any, Dict]]) -> List[Dict]:
+        """The generic sweep driver: evaluate ``(point, extra)`` design
+        points — points are :class:`InterconnectSpec` objects (see
+        :func:`repro.core.spec.spec_grid` for declarative grids) or
+        legacy kwargs dicts — concurrently when the pool has more than
+        one worker. Order of records matches ``points``.
 
         With ``pipeline_emulation`` the device emulation of point k runs
         under the host PnR of point k+1 (async dispatch); every emulation
@@ -337,11 +407,10 @@ def _executor_for(executor: Optional[SweepExecutor],
 def fifo_area_study(num_tracks: int = 5, track_width: int = 16
                     ) -> List[Dict]:
     """§4.1 / Fig. 8: static baseline vs full-FIFO vs split-FIFO SB area."""
-    ic = create_uniform_interconnect(width=8, height=8,
-                                     num_tracks=num_tracks,
-                                     track_width=track_width,
-                                     sb_type=SwitchBoxType.WILTON,
-                                     reg_density=1.0)
+    from .passes import PassManager
+    ic = PassManager().run(InterconnectSpec(
+        width=8, height=8, num_tracks=num_tracks, track_width=track_width,
+        sb_type=SwitchBoxType.WILTON, reg_density=1.0))
     base = switch_box_area(ic)
     recs = [{"design": "static_baseline", "sb_area": base, "overhead": 0.0}]
     for mode in ("full", "split"):
@@ -357,13 +426,15 @@ def sweep_num_tracks(tracks: Sequence[int] = (2, 3, 4, 5, 6),
                      sa_steps: Optional[int] = None, track_fc: float = 1.0,
                      executor: Optional[SweepExecutor] = None
                      ) -> List[Dict]:
-    """§4.2.1 / Figs. 10–11: SB/CB area and application runtime vs tracks."""
+    """§4.2.1 / Figs. 10–11: SB/CB area and application runtime vs tracks.
+
+    Declarative form: one base spec, a ``num_tracks`` axis, the generic
+    :meth:`SweepExecutor.run_points` driver."""
     ex = _executor_for(executor, apps, sa_steps)
-    points = [(dict(width=width, height=height, num_tracks=t, io_ring=True,
-                    sb_type=SwitchBoxType.WILTON, reg_density=1.0,
-                    cb_track_fc=track_fc, sb_track_fc=track_fc),
-               {"num_tracks": t}) for t in tracks]
-    return ex.run_points(points)
+    base = InterconnectSpec(width=width, height=height, io_ring=True,
+                            sb_type=SwitchBoxType.WILTON, reg_density=1.0,
+                            cb_track_fc=track_fc, sb_track_fc=track_fc)
+    return ex.run_points(spec_grid(base, {"num_tracks": tuple(tracks)}))
 
 
 def sweep_sb_topology(topologies: Sequence[SwitchBoxType] = (
@@ -378,11 +449,13 @@ def sweep_sb_topology(topologies: Sequence[SwitchBoxType] = (
     can never leave (its fatal restriction) while Wilton re-permutes
     tracks at every turn."""
     ex = _executor_for(executor, apps, sa_steps)
-    points = [(dict(width=width, height=height, num_tracks=num_tracks,
-                    io_ring=True, sb_type=topo, reg_density=1.0,
-                    cb_track_fc=track_fc, sb_track_fc=track_fc),
-               {"topology": topo.value}) for topo in topologies]
-    recs = ex.run_points(points)
+    base = InterconnectSpec(width=width, height=height,
+                            num_tracks=num_tracks, io_ring=True,
+                            reg_density=1.0,
+                            cb_track_fc=track_fc, sb_track_fc=track_fc)
+    recs = ex.run_points(spec_grid(
+        base, {"sb_type": tuple(topologies)},
+        label=lambda s: {"topology": s.sb_type.value}))
     for rec in recs:
         rec["n_routed"] = sum(1 for r in rec["apps"].values()
                               if r["success"])
@@ -402,26 +475,26 @@ def sweep_port_connections(kind: str,
     if kind not in ("sb", "cb"):
         raise ValueError("kind must be 'sb' or 'cb'")
     ex = _executor_for(executor, apps, sa_steps)
-    points = []
-    for n_sides in sides:
-        kw = {"sb_sides": n_sides} if kind == "sb" else {"cb_sides": n_sides}
-        points.append((dict(width=width, height=height,
+    base = InterconnectSpec(width=width, height=height,
                             num_tracks=num_tracks, io_ring=True,
-                            sb_type=SwitchBoxType.WILTON,
-                            reg_density=1.0, **kw),
-                       {"kind": kind, "sides": n_sides}))
-    return ex.run_points(points)
+                            sb_type=SwitchBoxType.WILTON, reg_density=1.0)
+    axis = f"{kind}_sides"
+    return ex.run_points(spec_grid(
+        base, {axis: tuple(sides)},
+        label=lambda s: {"kind": kind, "sides": getattr(s, axis)}))
 
 
 def generation_speed(sizes: Sequence[int] = (4, 8, 16, 32)) -> List[Dict]:
     """Abstract claim: "fast design space exploration" — IR generation +
     lowering speed vs array size."""
     from .lowering import compile_interconnect
+    from .passes import PassManager
     recs = []
     for s in sizes:
         t0 = time.perf_counter()
-        ic = create_uniform_interconnect(width=s, height=s, num_tracks=5,
-                                         reg_density=1.0)
+        ic = PassManager().run(InterconnectSpec(width=s, height=s,
+                                                num_tracks=5,
+                                                reg_density=1.0))
         t1 = time.perf_counter()
         fab = compile_interconnect(ic)
         t2 = time.perf_counter()
@@ -477,11 +550,11 @@ def _random_fabric_workload(width: int, height: int, num_tracks: int,
     random configs / IO streams / per-config depths."""
     import numpy as np
     from .lowering import compile_interconnect
+    from .passes import PassManager
 
-    ic = create_uniform_interconnect(width=width, height=height,
-                                     num_tracks=num_tracks, io_ring=True,
-                                     sb_type=SwitchBoxType.WILTON,
-                                     reg_density=1.0)
+    ic = PassManager().run(InterconnectSpec(
+        width=width, height=height, num_tracks=num_tracks, io_ring=True,
+        sb_type=SwitchBoxType.WILTON, reg_density=1.0))
     fab = compile_interconnect(ic, use_pallas=use_pallas)
     rng = np.random.default_rng(seed)
     cfgs = rng.integers(0, 4, (batch, fab.num_config)).astype(np.int32)

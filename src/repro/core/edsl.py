@@ -4,27 +4,26 @@ Two levels, as in the paper:
 
 * low level — instantiate ``Node`` subclasses and ``add_edge`` them together
   (Fig. 4 top);
-* high level — ``create_uniform_interconnect(...)`` (Fig. 4 bottom), a
-  helper that produces uniform interconnect topologies by varying array
-  size, switch-box topology, track count/width, pipeline register density
-  and core-port connectivity.
+* high level — a declarative :class:`repro.core.spec.InterconnectSpec`
+  compiled through the pass pipeline (:mod:`repro.core.passes`) via
+  ``canal.compile`` / ``PassManager.compile``.
+
+This module keeps the switch-box topology generators (the reusable
+"connection pattern" half of the eDSL) and the low-level node helpers.
+The old monolithic generator ``create_uniform_interconnect(...)`` (Fig. 4
+bottom) survives as a thin **deprecated** shim that builds a spec and runs
+the exact same pass pipeline — it produces IR isomorphic to
+``PassManager().run(InterconnectSpec(...))`` by construction.
 """
 from __future__ import annotations
 
-import enum
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence
 
-from .graph import (IO, Interconnect, InterconnectGraph, Node, NodeKind,
-                    PortNode, RegisterMuxNode, RegisterNode, SBConnection,
-                    Side, SwitchBox, SwitchBoxNode, Tile)
-from .tiles import Core, IOCore, MemCore, PECore, default_core_assigner
-
-
-class SwitchBoxType(enum.Enum):
-    DISJOINT = "disjoint"
-    WILTON = "wilton"
-    IMRAN = "imran"
+from .graph import IO, Interconnect, Node, SBConnection, Side, SwitchBoxNode
+from .spec import (SIDE_REDUCTION_ORDER, InterconnectSpec,  # noqa: F401
+                   SwitchBoxType, sides_for)
+from .tiles import Core
 
 
 # ---------------------------------------------------------------------------
@@ -95,67 +94,8 @@ SB_TOPOLOGIES: Dict[SwitchBoxType, Callable[[int], List[SBConnection]]] = {
 
 
 # ---------------------------------------------------------------------------
-# High-level generator
+# Deprecated high-level generator (now a shim over the pass pipeline)
 # ---------------------------------------------------------------------------
-
-ALL_SIDES: Tuple[Side, ...] = (Side.NORTH, Side.SOUTH, Side.EAST, Side.WEST)
-
-# Reduction order for the port-connection DSE (Fig. 12): 4 sides, then drop
-# EAST, then drop SOUTH.
-SIDE_REDUCTION_ORDER: Tuple[Side, ...] = (Side.NORTH, Side.WEST, Side.SOUTH,
-                                          Side.EAST)
-
-
-def sides_for(n: int) -> Tuple[Side, ...]:
-    """First n sides in the paper's reduction order (Fig. 12)."""
-    if not 1 <= n <= 4:
-        raise ValueError("side count must be in 1..4")
-    return SIDE_REDUCTION_ORDER[:n]
-
-
-@dataclass
-class InterconnectSpec:
-    """Everything `create_uniform_interconnect` can vary (the DSE axes)."""
-
-    width: int = 8                  # array width in tiles
-    height: int = 8                 # array height in tiles
-    track_width: int = 16           # routing track bit width
-    num_tracks: int = 5             # tracks per side
-    sb_type: SwitchBoxType = SwitchBoxType.WILTON
-    reg_density: float = 1.0        # fraction of tracks with pipeline regs
-    cb_sides: int = 4               # sides feeding CBs (core inputs)
-    sb_sides: int = 4               # sides fed by core outputs
-    cb_track_fc: float = 1.0        # fraction of tracks a CB connects to
-    sb_track_fc: float = 1.0        # fraction of tracks a core output drives
-    mem_columns: Tuple[int, ...] = ()
-    io_ring: bool = False
-    pe_inputs: int = 4
-    pe_outputs: int = 2
-    wire_delay: float = 0.12        # ns per inter-tile hop
-    mux_delay: float = 0.06         # ns per SB mux
-    cb_delay: float = 0.05          # ns through CB mux
-    extra_layers: Dict[int, int] = field(default_factory=dict)
-    # ready-valid support (hybrid interconnect, §3.3)
-    ready_valid: bool = False
-    fifo_depth: int = 2
-    split_fifo: bool = False
-
-    def sb_connection_sides(self) -> Tuple[Side, ...]:
-        return sides_for(self.sb_sides)
-
-    def cb_connection_sides(self) -> Tuple[Side, ...]:
-        return sides_for(self.cb_sides)
-
-
-def _reg_pattern(spec: InterconnectSpec, x: int, y: int, track: int) -> bool:
-    """Deterministic register placement at the requested density."""
-    if spec.reg_density <= 0.0:
-        return False
-    if spec.reg_density >= 1.0:
-        return True
-    period = max(1, round(1.0 / spec.reg_density))
-    return (x + y + track) % period == 0
-
 
 def create_uniform_interconnect(
         width: int = 8,
@@ -169,117 +109,25 @@ def create_uniform_interconnect(
         spec: Optional[InterconnectSpec] = None,
         **kwargs) -> Interconnect:
     """Create a uniform interconnect (all SBs share one topology, no diagonal
-    connections). Mirrors the paper's helper (Fig. 4, bottom)."""
+    connections). Mirrors the paper's helper (Fig. 4, bottom).
+
+    .. deprecated::
+        Use the front door instead: ``canal.compile(InterconnectSpec(...))``
+        (or ``PassManager().run(spec)`` for the bare IR). This shim builds
+        the same spec and runs the same pass pipeline, so the result is
+        isomorphic; it only exists so existing call sites keep working.
+    """
+    warnings.warn(
+        "create_uniform_interconnect is deprecated; use "
+        "canal.compile(InterconnectSpec(...)) — the pass-pipeline front "
+        "door — instead", DeprecationWarning, stacklevel=2)
+    from .passes import PassManager
     if spec is None:
-        if isinstance(sb_type, str):
-            sb_type = SwitchBoxType(sb_type)
         spec = InterconnectSpec(width=width, height=height, sb_type=sb_type,
                                 num_tracks=num_tracks,
                                 track_width=track_width,
                                 reg_density=reg_density, **kwargs)
-    if core_fn is None:
-        core_fn = default_core_assigner(
-            mem_columns=spec.mem_columns, io_ring=spec.io_ring,
-            pe_inputs=spec.pe_inputs, pe_outputs=spec.pe_outputs,
-            width=spec.track_width)
-
-    layers = {spec.track_width: spec.num_tracks}
-    layers.update(spec.extra_layers)
-
-    graphs: Dict[int, InterconnectGraph] = {}
-    for bit_width, n_tracks in layers.items():
-        graphs[bit_width] = _build_layer(spec, bit_width, n_tracks, core_fn)
-
-    ic = Interconnect(graphs)
-    ic.params.update(dict(
-        width=spec.width, height=spec.height, sb_type=spec.sb_type.value,
-        num_tracks=spec.num_tracks, track_width=spec.track_width,
-        reg_density=spec.reg_density, cb_sides=spec.cb_sides,
-        sb_sides=spec.sb_sides, ready_valid=spec.ready_valid,
-        fifo_depth=spec.fifo_depth, split_fifo=spec.split_fifo,
-        wire_delay=spec.wire_delay, mux_delay=spec.mux_delay,
-    ))
-    ic.spec = spec  # type: ignore[attr-defined]
-    return ic
-
-
-def _build_layer(spec: InterconnectSpec, bit_width: int, n_tracks: int,
-                 core_fn: Callable[[int, int, int, int], Optional[Core]]
-                 ) -> InterconnectGraph:
-    g = InterconnectGraph(bit_width)
-    topo_fn = SB_TOPOLOGIES[spec.sb_type]
-    conns = topo_fn(n_tracks)
-
-    # 1. tiles + switch boxes (+ internal topology)
-    for y in range(spec.height):
-        for x in range(spec.width):
-            sb = SwitchBox(x, y, n_tracks, bit_width, conns,
-                           mux_delay=spec.mux_delay)
-            core = core_fn(x, y, spec.width, spec.height)
-            tile = Tile(x, y, sb, core)
-            g.add_tile(tile)
-
-    # 2. core <-> interconnect (CB in, SB out), honouring side reduction and
-    # track population fraction Fc (staggered per port, VPR-style)
-    cb_sides = spec.cb_connection_sides()
-    sb_sides = spec.sb_connection_sides()
-    cb_stride = max(1, round(1.0 / max(spec.cb_track_fc, 1e-6)))
-    sb_stride = max(1, round(1.0 / max(spec.sb_track_fc, 1e-6)))
-    for tile in g.tiles.values():
-        if tile.core is None:
-            continue
-        for pi, p in enumerate(tile.core.inputs()):
-            if p.width != bit_width:
-                continue
-            port = tile.get_port(p.name)
-            for side in cb_sides:
-                for t in range(n_tracks):
-                    if (t + pi) % cb_stride != 0:
-                        continue
-                    sb_in = tile.switchbox.get_sb(side, t, IO.SB_IN)
-                    sb_in.add_edge(port, delay=spec.cb_delay)
-        for pi, p in enumerate(tile.core.outputs()):
-            if p.width != bit_width:
-                continue
-            port = tile.get_port(p.name)
-            for side in sb_sides:
-                for t in range(n_tracks):
-                    if (t + pi) % sb_stride != 0:
-                        continue
-                    sb_out = tile.switchbox.get_sb(side, t, IO.SB_OUT)
-                    port.add_edge(sb_out)
-
-    # 3. inter-tile wiring (+ pipeline registers per density pattern)
-    for (x, y), tile in g.tiles.items():
-        for side in ALL_SIDES:
-            dx, dy = side.delta()
-            nbr = g.get_tile(x + dx, y + dy)
-            if nbr is None:
-                continue
-            for t in range(n_tracks):
-                src = tile.switchbox.get_sb(side, t, IO.SB_OUT)
-                dst = nbr.switchbox.get_sb(side.opposite(), t, IO.SB_IN)
-                if _reg_pattern(spec, x, y, t):
-                    _insert_register(g, src, dst, side, t, spec)
-                else:
-                    src.add_edge(dst, delay=spec.wire_delay)
-    return g
-
-
-def _insert_register(g: InterconnectGraph, src: SwitchBoxNode,
-                     dst: SwitchBoxNode, side: Side, track: int,
-                     spec: InterconnectSpec) -> None:
-    """src -> REG -> RMUX -> dst, with src -> RMUX bypass (canal pattern)."""
-    name = f"{side.name}_{track}"
-    reg = RegisterNode(name, src.x, src.y, track, src.width, delay=0.0)
-    rmux = RegisterMuxNode(name, src.x, src.y, track, src.width,
-                           delay=spec.mux_delay)
-    src.add_edge(reg)
-    reg.add_edge(rmux)
-    src.add_edge(rmux)                      # bypass path
-    rmux.add_edge(dst, delay=spec.wire_delay)
-    g.add_register(reg)
-    g.add_reg_mux(rmux)
+    return PassManager().run(spec, core_fn=core_fn)
 
 
 # ---------------------------------------------------------------------------

@@ -209,7 +209,7 @@ class SwitchBox:
         self.y = y
         self.num_tracks = num_tracks
         self.width = width
-        self.internal_connections = list(internal_connections)
+        self.internal_connections: List[SBConnection] = []
         # sbs[side][io][track]
         self.sbs: Dict[Side, Dict[IO, List[SwitchBoxNode]]] = {}
         for side in Side:
@@ -220,10 +220,20 @@ class SwitchBox:
                                   delay=mux_delay if io == IO.SB_OUT else 0.0)
                     for t in range(num_tracks)
                 ]
-        for (t_from, s_from, t_to, s_to) in self.internal_connections:
+        self.add_internal_connections(internal_connections)
+
+    def add_internal_connections(
+            self, connections: Sequence[SBConnection]) -> None:
+        """Wire internal topology edges (in -> out). Split out of the
+        constructor so the pass pipeline can materialize bare switch boxes
+        first (``materialize_tiles``) and apply the topology as its own
+        pass (``apply_sb_topology``)."""
+        connections = list(connections)   # survive one-shot iterators
+        for (t_from, s_from, t_to, s_to) in connections:
             src = self.get_sb(s_from, t_from, IO.SB_IN)
             dst = self.get_sb(s_to, t_to, IO.SB_OUT)
             src.add_edge(dst)
+        self.internal_connections.extend(connections)
 
     def get_sb(self, side: Side, track: int, io: IO) -> SwitchBoxNode:
         return self.sbs[side][io][track]
@@ -309,6 +319,9 @@ class InterconnectGraph:
         self.tiles: Dict[Tuple[int, int], Tile] = {}
         self.registers: List[RegisterNode] = []
         self.reg_muxes: List[RegisterMuxNode] = []
+        #: nodes removed by ``prune`` — excluded from ``nodes()`` (and so
+        #: from lowering, routing, area and connectivity)
+        self._pruned: set = set()
 
     # -- construction --------------------------------------------------------
     def add_tile(self, tile: Tile) -> None:
@@ -335,10 +348,32 @@ class InterconnectGraph:
     def add_reg_mux(self, mux: RegisterMuxNode) -> None:
         self.reg_muxes.append(mux)
 
+    def prune(self, nodes: Iterable[Node]) -> None:
+        """Remove fully isolated nodes (no fan-in, no fan-out) from the
+        graph's node set. A connected node cannot be pruned: removal
+        would renumber surviving mux inputs and silently change config
+        semantics."""
+        nodes = list(nodes)       # a generator must not drain on validation
+        for n in nodes:
+            if n.fan_in or n.fan_out:
+                raise ValueError(f"cannot prune connected node {n}")
+        dead = set(nodes)
+        if not dead:
+            return
+        self.registers = [r for r in self.registers if r not in dead]
+        self.reg_muxes = [m for m in self.reg_muxes if m not in dead]
+        self._pruned.update(dead)
+
     # -- queries --------------------------------------------------------------
     def nodes(self) -> Iterator[Node]:
-        for tile in self.tiles.values():
-            yield from tile.nodes()
+        if self._pruned:
+            for tile in self.tiles.values():
+                for n in tile.nodes():
+                    if n not in self._pruned:
+                        yield n
+        else:
+            for tile in self.tiles.values():
+                yield from tile.nodes()
         yield from self.registers
         yield from self.reg_muxes
 

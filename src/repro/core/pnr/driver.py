@@ -31,6 +31,9 @@ class PnRResult:
     route_iterations: int = 0
     seconds: float = 0.0
     error: str = ""
+    #: router engine that produced the winning route ("python"/"minplus");
+    #: with strategy "auto" this records the resolved pick per point
+    route_strategy: str = ""
 
     def route_edges(self) -> List[Tuple[Node, Node]]:
         assert self.routing is not None
@@ -45,13 +48,17 @@ def place_and_route(ic: Interconnect, app: AppGraph,
                     split_fifo_ctrl_delay: float = 0.0,
                     seed: int = 0,
                     resources: Optional[RoutingResources] = None,
-                    route_strategy: str = "python") -> PnRResult:
+                    route_strategy: str = "python",
+                    auto_min_tiles: Optional[int] = None) -> PnRResult:
     """Run the full three-stage PnR flow, sweeping α and keeping the best
     post-route critical path (paper §3.4).
 
     ``route_strategy`` selects the router engine (see
     ``repro.core.pnr.route``): ``"python"`` A* oracle, ``"minplus"``
-    device-batched coarse lower bounds, or ``"auto"``."""
+    device-batched coarse lower bounds, or ``"auto"`` (tile-count switch,
+    threshold overridable via ``auto_min_tiles`` /
+    ``CANAL_AUTO_MIN_TILES``; the resolved engine is recorded on
+    ``PnRResult.route_strategy``)."""
     t0 = time.perf_counter()
     W = int(ic.params.get("width", ic.dims()[0]))
     H = int(ic.params.get("height", ic.dims()[1]))
@@ -78,7 +85,8 @@ def place_and_route(ic: Interconnect, app: AppGraph,
         try:
             routing = route_app(ic, packed, pl, max_iters=route_iters,
                                 res=resources, seed=seed,
-                                strategy=route_strategy)
+                                strategy=route_strategy,
+                                auto_min_tiles=auto_min_tiles)
         except RoutingError as e:
             last_err = str(e)
             continue
@@ -89,7 +97,8 @@ def place_and_route(ic: Interconnect, app: AppGraph,
             success=True, placement=pl, packed=packed, routing=routing,
             timing=timing, alpha=alpha,
             wirelength=routing.total_wirelength(),
-            route_iterations=routing.iterations)
+            route_iterations=routing.iterations,
+            route_strategy=routing.strategy)
         if best is None or (cand.timing["critical_path_ns"]
                             < best.timing["critical_path_ns"]):
             best = cand

@@ -56,10 +56,14 @@ multiple of the nets/sec (see ``benchmarks/pnr_speed.py``).
 from __future__ import annotations
 
 import heapq
+import logging
+import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
+
+_log = logging.getLogger(__name__)
 
 from repro.core.graph import (Interconnect, Node, NodeKind)
 from .packing import PackedGraph
@@ -75,8 +79,28 @@ COARSE_INF = 3.0e38 / 4
 #: anything above this is treated as coarse-unreachable
 _INF_CUT = COARSE_INF / 2
 #: "auto" strategy switches to the device-batched coarse fields at this
-#: many tiles (~7x7): below, field setup costs more than it prunes
+#: many tiles (~7x7): below, field setup costs more than it prunes.
+#: Default only — override per process via the CANAL_AUTO_MIN_TILES env
+#: var or per design point via InterconnectSpec.auto_min_tiles (plumbed
+#: through route_nets/route_app/place_and_route ``auto_min_tiles=``).
 _AUTO_MIN_TILES = 49
+
+
+def auto_min_tiles_threshold(override: Optional[int] = None) -> int:
+    """Resolve the "auto" strategy tile threshold: explicit override >
+    ``CANAL_AUTO_MIN_TILES`` env var > module default. The env var exists
+    so the ROADMAP calibration item can re-run sweeps at candidate
+    thresholds without code edits."""
+    if override is not None:
+        return int(override)
+    env = os.environ.get("CANAL_AUTO_MIN_TILES")
+    if env:
+        try:
+            return int(env)
+        except ValueError:
+            _log.warning("ignoring non-integer CANAL_AUTO_MIN_TILES=%r",
+                         env)
+    return _AUTO_MIN_TILES
 #: hop bias of the minplus expander, as a fraction of ``hop_cost`` per
 #: remaining Manhattan tile: f = g + h + bias·manhattan. With a
 #: near-exact h every monotone staircase between source and sink ties
@@ -332,6 +356,9 @@ class RoutingResult:
     iterations: int
     overuse_history: List[int]
     resources: RoutingResources
+    #: the engine that actually routed ("python"/"minplus" — "auto" is
+    #: resolved before routing starts and recorded here)
+    strategy: str = "python"
 
     def all_edges_nodes(self) -> List[Tuple[Node, Node]]:
         out = []
@@ -419,12 +446,19 @@ def _astar(res: RoutingResources, sources: Dict[int, float], sink: int,
     return None
 
 
-def _resolve_strategy(res: RoutingResources, strategy: str) -> str:
+def _resolve_strategy(res: RoutingResources, strategy: str,
+                      auto_min_tiles: Optional[int] = None) -> str:
     if strategy in ("python", "minplus"):
         return strategy
     if strategy == "auto":
-        return ("minplus" if res.coarse().n_tiles >= _AUTO_MIN_TILES
-                else "python")
+        threshold = auto_min_tiles_threshold(auto_min_tiles)
+        n_tiles = res.coarse().n_tiles
+        picked = "minplus" if n_tiles >= threshold else "python"
+        # logged (and recorded on RoutingResult.strategy) so DSE sweeps
+        # produce the calibration data the ROADMAP item asks for
+        _log.info("route strategy auto -> %s (%d tiles, threshold %d)",
+                  picked, n_tiles, threshold)
+        return picked
     # deliberately NOT a RoutingError: place_and_route treats those as
     # ordinary routing failures (unroutable design points), which would
     # silently turn a config typo into an all-failed sweep
@@ -437,7 +471,8 @@ def route_nets(res: RoutingResources,
                pres_growth: float = 1.5, hist_w: float = 0.4,
                seed: int = 0,
                node_capacity: Optional[np.ndarray] = None,
-               strategy: str = "python") -> RoutingResult:
+               strategy: str = "python",
+               auto_min_tiles: Optional[int] = None) -> RoutingResult:
     """PathFinder negotiation over (name, src, sinks) nets.
 
     ``seed`` drives the deterministic tie-break permutation used by A*
@@ -449,8 +484,11 @@ def route_nets(res: RoutingResources,
 
     ``strategy``: ``"python"`` (Manhattan-bounded A*, the oracle),
     ``"minplus"`` (device-batched coarse cost fields as A* lower bounds;
-    see the module docstring), or ``"auto"``."""
-    strat = _resolve_strategy(res, strategy)
+    see the module docstring), or ``"auto"`` (tile-count switch at
+    ``auto_min_tiles`` — defaulting to the CANAL_AUTO_MIN_TILES env var,
+    then ``_AUTO_MIN_TILES``; the resolved pick is logged and recorded on
+    ``RoutingResult.strategy``)."""
+    strat = _resolve_strategy(res, strategy, auto_min_tiles)
     n = len(res.nodes)
     tie = np.random.default_rng(seed).permutation(n)
     usage = np.zeros(n, np.int32)
@@ -542,7 +580,8 @@ def route_nets(res: RoutingResources,
         netr = routed[name]
         netr.delay = _net_delay(res, netr)
         result_nets.append(netr)
-    return RoutingResult(result_nets, len(overuse_hist), overuse_hist, res)
+    return RoutingResult(result_nets, len(overuse_hist), overuse_hist, res,
+                         strategy=strat)
 
 
 def _net_overused(net: Optional[RoutedNet], usage: np.ndarray,
@@ -572,7 +611,8 @@ def route_app(ic: Interconnect, packed: PackedGraph,
               placement: Dict[str, Tuple[int, int]],
               width: int = 16, max_iters: int = 40,
               res: Optional[RoutingResources] = None,
-              seed: int = 0, strategy: str = "python") -> RoutingResult:
+              seed: int = 0, strategy: str = "python",
+              auto_min_tiles: Optional[int] = None) -> RoutingResult:
     """Route a packed+placed application on the interconnect."""
     if res is None:
         res = RoutingResources(ic)
@@ -600,4 +640,4 @@ def route_app(ic: Interconnect, packed: PackedGraph,
             continue
         nets.append((net.name, src, sinks))
     return route_nets(res, nets, max_iters=max_iters, seed=seed,
-                      strategy=strategy)
+                      strategy=strategy, auto_min_tiles=auto_min_tiles)

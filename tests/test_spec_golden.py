@@ -1,0 +1,88 @@
+"""Spec-golden gate: digests of the stock configs are committed as
+fixtures, so any silent drift in spec serialization (cache-key breakage)
+or in the compiled IR (connectivity / mux-input-order / config-semantics
+drift) fails CI loudly.
+
+If a change is *intentional* (new spec field, deliberate IR change),
+regenerate the fixture:
+
+    PYTHONPATH=src python tests/test_spec_golden.py --regen
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.configs.cgra_amber import FULL, smoke
+from repro.core.passes import PassManager, ir_digest
+from repro.core.spec import InterconnectSpec
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "spec_digests.json")
+
+#: the stock design points pinned by the golden fixture. amber_full's IR
+#: is not built here (32x32x5 is benchmark-scale); its spec digest still
+#: guards serialization drift.
+GOLDEN_SPECS = {
+    "stock_4x4": InterconnectSpec(width=4, height=4, num_tracks=2,
+                                  io_ring=True, reg_density=1.0),
+    "stock_8x8": InterconnectSpec(width=8, height=8, num_tracks=5,
+                                  io_ring=True, reg_density=1.0),
+    "amber_smoke": smoke(),
+    "amber_full": FULL,
+}
+IR_BUILT = ("stock_4x4", "stock_8x8", "amber_smoke")
+
+
+def _current() -> dict:
+    out = {}
+    for name, spec in GOLDEN_SPECS.items():
+        ird = (ir_digest(PassManager().run(spec)) if name in IR_BUILT
+               else None)
+        out[name] = {"spec_digest": spec.digest(), "ir_digest": ird}
+    return out
+
+
+def _load() -> dict:
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_SPECS))
+def test_spec_digest_golden(name):
+    """Spec serialization is stable: digest matches the committed value
+    (which also proves process-restart stability — the fixture was
+    written by a different interpreter run)."""
+    golden = _load()
+    assert name in golden, f"regenerate the fixture (missing {name})"
+    assert GOLDEN_SPECS[name].digest() == golden[name]["spec_digest"], (
+        f"{name}: spec digest drifted from the committed golden — if the "
+        "spec schema changed intentionally, regenerate via "
+        "`python tests/test_spec_golden.py --regen`")
+
+
+@pytest.mark.parametrize("name", IR_BUILT)
+def test_ir_digest_golden(name):
+    """The compiled IR is stable: the pass pipeline produces connectivity
+    (mux input order included, i.e. config-bit semantics) identical to
+    the committed golden."""
+    golden = _load()
+    ic = PassManager().run(GOLDEN_SPECS[name])
+    assert ir_digest(ic) == golden[name]["ir_digest"], (
+        f"{name}: compiled IR drifted from the committed golden — "
+        "bitstreams/configs for this design point are no longer "
+        "compatible. If intentional, regenerate via "
+        "`python tests/test_spec_golden.py --regen`")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        cur = _current()
+        with open(FIXTURE, "w") as f:
+            json.dump(cur, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {FIXTURE}")
+        print(json.dumps(cur, indent=2, sort_keys=True))
+    else:
+        print(__doc__)
