@@ -7,6 +7,7 @@ import time
 from typing import Any, Callable, Dict, List
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def timed(fn: Callable[[], Any]) -> tuple:
@@ -26,4 +27,26 @@ def save_json(name: str, payload: Any) -> str:
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=str)
+    return path
+
+
+def append_bench(name: str, record: Dict) -> str:
+    """Append one timestamped record to the repo-root ``<name>.json``
+    trajectory file (a JSON list that grows run over run — the
+    append-style perf history the roadmap tracks, as opposed to the
+    overwritten snapshots under ``benchmarks/results/``). A corrupt or
+    non-list file is restarted rather than crashing the benchmark."""
+    path = os.path.join(REPO_ROOT, f"{name}.json")
+    try:
+        with open(path) as f:
+            history = json.load(f)
+        if not isinstance(history, list):
+            history = [history]
+    except (OSError, json.JSONDecodeError):
+        history = []
+    history.append(dict(record, ts=time.time()))
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=2, default=str)
+    os.replace(tmp, path)
     return path

@@ -17,7 +17,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from .common import emit, save_json
+from .common import append_bench, emit, save_json
 
 
 def _route_workload(width: int, height: int, num_tracks: int,
@@ -93,14 +93,19 @@ def sweep_speed(quick: bool = False) -> Dict:
     apps = {k: BENCH_APPS[k] for k in
             (("fir",) if quick else ("fir", "tree_reduce"))}
     tracks = (5,) if quick else (4, 5)
+    # the annealing budget lives on the spec now (folded PnR knobs): the
+    # design point fully describes how it is placed and routed
     base = InterconnectSpec(width=8, height=8, io_ring=True,
-                            reg_density=1.0)
+                            reg_density=1.0, sa_steps=30, sa_batch=8)
     points = spec_grid(base, {"num_tracks": tracks})
     rec: Dict = {"tracks": list(tracks), "apps": list(apps)}
     for strategy in ("python", "minplus"):
-        ex = SweepExecutor(apps=apps, sa_steps=30, sa_batch=8,
+        # store=False: this benchmark times the router — serving records
+        # from a warm store would measure the cache, not the engine
+        ex = SweepExecutor(apps=apps,
                            emulate_cycles=8, use_pallas=False,
-                           route_strategy=strategy, max_workers=2)
+                           route_strategy=strategy, max_workers=2,
+                           store=False)
         t0 = time.perf_counter()
         recs = ex.run_points(points)
         rec[strategy] = {"seconds": time.perf_counter() - t0,
@@ -136,4 +141,12 @@ def run(quick: bool = False):
         f"minplus={sweep_rec['minplus']['seconds']:.2f}s "
         f"speedup={sweep_rec['speedup']:.2f}x"))
     save_json("BENCH_pnr", {"routing": route_rec, "sweep": sweep_rec})
+    # repo-root perf trajectory (append-style; one record per run)
+    append_bench("BENCH_pnr", {
+        "route_speedup": route_rec["speedup"],
+        "minplus_nets_per_sec": route_rec["minplus"]["nets_per_sec"],
+        "python_nets_per_sec": route_rec["python"]["nets_per_sec"],
+        "sweep_speedup": sweep_rec["speedup"],
+        "sweep_minplus_seconds": sweep_rec["minplus"]["seconds"],
+    })
     return lines

@@ -1,13 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig08]
+        [--store PATH | --no-store]
 
 Prints ``name,us_per_call,derived`` CSV per benchmark and saves JSON
-records under benchmarks/results/ (consumed by EXPERIMENTS.md).
+records under benchmarks/results/ (consumed by EXPERIMENTS.md). Sweep
+benchmarks run store-backed: design-point records persist in the
+spec-addressed result store (``--store``, default ``.canal_store`` /
+``$CANAL_RESULT_STORE``), so an incremental re-run only recomputes
+design points whose spec digest is new — everything else is served from
+disk. ``--no-store`` forces every point cold.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -19,7 +26,27 @@ def main() -> None:
                     help="reduced app/track sets")
     ap.add_argument("--only", type=str, default=None,
                     help="substring filter on benchmark module name")
+    ap.add_argument("--store", type=str, default=None,
+                    help="result-store root (default $CANAL_RESULT_STORE "
+                         "or .canal_store)")
+    ap.add_argument("--no-store", action="store_true",
+                    help="run every design point cold (no persistence)")
     args = ap.parse_args()
+
+    # the sweep executors attach the store via the env default; setting it
+    # here makes every figure benchmark store-backed without threading a
+    # store object through each module
+    from repro.core.store import STORE_ENV, default_store_root
+    if args.no_store:
+        os.environ.pop(STORE_ENV, None)
+    else:
+        os.environ[STORE_ENV] = args.store or default_store_root()
+        # per-record PnR timings (gen_pnr_seconds) always reflect the
+        # original cold computation; only the module-level wall clocks
+        # shrink on a warm store
+        print(f"# result store: {os.environ[STORE_ENV]} (warm sweeps "
+              "measure serve latency; --no-store for engine timings)",
+              flush=True)
 
     from . import (dse_speed, fig08_fifo_area, fig09_topology_routability,
                    fig10_track_area, fig11_track_runtime, fig13_port_area,

@@ -1,42 +1,58 @@
 """Design-space exploration example (paper §4.2 in miniature): sweep
-switch-box topology and track count, report area + routability + critical
-path, and run the same Canal router on a TPU-pod traffic pattern
-(the beyond-paper ICI integration).
+switch-box topology and track count through the persistent, store-backed
+serving front end (``canal.serve``), report area + routability +
+critical path, and run the same Canal router on a TPU-pod traffic
+pattern (the beyond-paper ICI integration).
+
+Re-run it: the second invocation serves every design point from the
+on-disk result store (`.canal_store` / ``$CANAL_RESULT_STORE``) by spec
+digest — zero PnR recomputation.
 
     PYTHONPATH=src python examples/cgra_dse.py
 """
 import numpy as np
 
 import canal
-from repro.core.dse import SweepExecutor, sweep_sb_topology
+from repro.core.dse import sweep_sb_topology
 from repro.core.ici import pod_collective_model, route_traffic_canal
 from repro.core.pnr.app import app_butterfly
 
 
 def main():
+    # one serving front end for the whole session: coalescing queries
+    # over the persistent result store, misses batched through a shared
+    # SweepExecutor. The annealing budget (sa_steps) is a spec field now.
+    svc = canal.serve(apps={"butterfly3": lambda: app_butterfly(3)})
+
     print("== topology DSE (Wilton vs Disjoint, Fc=0.5) ==")
     recs = sweep_sb_topology(
         (canal.SwitchBoxType.WILTON, canal.SwitchBoxType.DISJOINT),
-        apps={"butterfly3": lambda: app_butterfly(3)},
-        num_tracks=4, sa_steps=40, track_fc=0.5)
+        num_tracks=4, track_fc=0.5, executor=svc.executor)
     for r in recs:
         print(f"  {r['topology']:9s} routed {r['n_routed']}/{r['n_apps']} "
               f"sb_area={r['sb_area']:.0f}um2")
 
-    print("== track-count DSE (declarative spec grid) ==")
+    print("== track-count DSE (spec grid served by digest) ==")
     base = canal.InterconnectSpec(width=8, height=8, io_ring=True,
                                   reg_density=1.0, cb_track_fc=0.5,
-                                  sb_track_fc=0.5)
-    ex = SweepExecutor(apps={"butterfly3": lambda: app_butterfly(3)},
-                       sa_steps=40)
-    recs = ex.run_points(canal.spec_grid(base, {"num_tracks": (2, 4, 6)}))
-    for r in recs:
+                                  sb_track_fc=0.5, sa_steps=40)
+    grid = canal.spec_grid(base, {"num_tracks": (2, 4, 6)})
+    recs = svc.query([spec for spec, _ in grid])
+    for (spec, extra), r in zip(grid, recs):
         ok = [a for a in r["apps"].values() if a["success"]]
         crit = (sum(a["critical_path_ns"] for a in ok) / len(ok)
                 if ok else float("nan"))
-        print(f"  tracks={r['num_tracks']} sb={r['sb_area']:.0f}um2 "
+        print(f"  tracks={extra['num_tracks']} sb={r['sb_area']:.0f}um2 "
               f"cb={r['cb_area']:.0f}um2 routed={len(ok)} "
               f"crit={crit:.2f}ns spec={r['spec_digest'][:10]}")
+
+    # querying the same grid again is pure store/coalesce traffic
+    svc.query([spec for spec, _ in grid])
+    st = svc.stats()
+    print(f"  serve stats: hits={st['hits']} misses={st['misses']} "
+          f"hit_rate={st['hit_rate']:.2f} "
+          f"warm-query avg {st['latency_avg_s'] * 1e3:.1f} ms "
+          f"(store: {st['store']['records']} records on disk)")
 
     print("== pod-fabric DSE (Canal router on the ICI torus) ==")
     rng = np.random.default_rng(0)

@@ -30,9 +30,26 @@ from repro.core.passes import (DEFAULT_PASSES, IRPass, PassContext,  # noqa: F40
                                PassManager, ir_digest)
 from repro.core.spec import (InterconnectSpec, SwitchBoxType,  # noqa: F401
                              sides_for, spec_from_kwargs, spec_grid)
+from repro.core.store import ResultStore  # noqa: F401
+
+
+def serve(store=None, **kwargs):
+    """Start a DSE serving front end (`repro.serve.DSEService`): a
+    coalescing ``query(spec | [specs]) -> records`` service over the
+    spec-addressed persistent result store, with one shared
+    ``SweepExecutor`` batching the misses.
+
+        svc = canal.serve(store=".canal_store", emulate_cycles=16)
+        record = svc.query(canal.InterconnectSpec(width=8, height=8))
+
+    Lazy import: serving pulls in the JAX-backed execution stack, which
+    spec-only users (digests, grids) should not pay for."""
+    from repro.serve.dse_service import serve as _serve
+    return _serve(store=store, **kwargs)
+
 
 __all__ = [
     "CompiledFabric", "compile", "DEFAULT_PASSES", "IRPass", "PassContext",
     "PassManager", "ir_digest", "InterconnectSpec", "SwitchBoxType",
-    "sides_for", "spec_from_kwargs", "spec_grid",
+    "sides_for", "spec_from_kwargs", "spec_grid", "ResultStore", "serve",
 ]

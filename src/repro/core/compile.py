@@ -97,20 +97,42 @@ class CompiledFabric:
         return res
 
     # ------------------------------------------------------------------ PnR
-    def place_and_route(self, app, alphas: Sequence[float] = (1.0, 2.0, 4.0),
-                        sa_steps: int = 200, sa_batch: int = 32,
-                        seed: int = 0, reg_penalty: float = 4.0,
+    def place_and_route(self, app,
+                        alphas: Optional[Sequence[float]] = None,
+                        sa_steps: Optional[int] = None,
+                        sa_batch: Optional[int] = None,
+                        seed: Optional[int] = None,
+                        reg_penalty: Optional[float] = None,
                         route_strategy: Optional[str] = None,
                         **kwargs):
         """Pack, place and route ``app`` on this fabric (paper §3.4).
-        The spec's route knobs apply unless overridden per call."""
+
+        Every PnR knob resolves spec-first: a per-call argument wins,
+        then the spec's folded knob (``spec.alphas``, ``spec.sa_steps``,
+        ...), then the historical front-door default — so a fully-pinned
+        spec (one whose ``digest()`` addresses the result store) routes
+        identically here and in the DSE executor."""
         from .pnr import place_and_route as pnr
-        strategy = (route_strategy or self.spec.route_strategy or "auto")
-        return pnr(self._ic, app, alphas=alphas, sa_steps=sa_steps,
-                   sa_batch=sa_batch, seed=seed,
-                   resources=self.resources(reg_penalty),
+        s = self.spec
+
+        def pick(call_value, spec_value, default):
+            if call_value is not None:
+                return call_value
+            return spec_value if spec_value is not None else default
+
+        strategy = (route_strategy or s.route_strategy or "auto")
+        if (kwargs.get("split_fifo_ctrl_delay") is None
+                and s.split_fifo_ctrl_delay is not None):
+            kwargs["split_fifo_ctrl_delay"] = s.split_fifo_ctrl_delay
+        return pnr(self._ic, app,
+                   alphas=pick(alphas, s.alphas, (1.0, 2.0, 4.0)),
+                   sa_steps=pick(sa_steps, s.sa_steps, 200),
+                   sa_batch=pick(sa_batch, s.sa_batch, 32),
+                   seed=pick(seed, s.seed, 0),
+                   resources=self.resources(
+                       pick(reg_penalty, s.reg_penalty, 4.0)),
                    route_strategy=strategy,
-                   auto_min_tiles=self.spec.auto_min_tiles, **kwargs)
+                   auto_min_tiles=s.auto_min_tiles, **kwargs)
 
     # ------------------------------------------------------------ emulation
     def emulate(self, result, inputs: Dict[Union[str, Coord], np.ndarray],

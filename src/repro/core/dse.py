@@ -37,6 +37,7 @@ import json
 import os
 import threading
 import time
+import warnings
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -45,6 +46,7 @@ from .pnr import place_and_route
 from .pnr.app import BENCH_APPS
 from .spec import (InterconnectSpec, SwitchBoxType, spec_from_kwargs,
                    spec_grid)
+from .store import STORE_ENV, ResultStore
 
 def _as_spec(point) -> InterconnectSpec:
     """Canonicalize a design point: an InterconnectSpec passes through, a
@@ -59,6 +61,17 @@ def _as_spec(point) -> InterconnectSpec:
         f"got {type(point).__name__}")
 
 
+#: sentinel distinguishing "caller never passed it" from any real value
+_UNSET = object()
+
+#: PnR knobs folded into :class:`InterconnectSpec` (PR 5) with the
+#: executor-level defaults they inherit while the spec leaves them unset.
+#: Passing them to ``SweepExecutor.__init__`` still works but is
+#: deprecated in favour of the spec field of the same name.
+_FOLDED_KNOB_DEFAULTS: Dict[str, Any] = {
+    "sa_steps": 60, "sa_batch": 16, "alphas": (2.0,),
+    "split_fifo_ctrl_delay": 0.0, "seed": 0, "reg_penalty": 4.0,
+}
 
 
 class SweepExecutor:
@@ -74,43 +87,83 @@ class SweepExecutor:
     """
 
     def __init__(self, apps: Optional[Dict[str, Callable]] = None,
-                 sa_steps: int = 60, sa_batch: int = 16,
-                 alphas: Sequence[float] = (2.0,),
-                 split_fifo_ctrl_delay: float = 0.0,
+                 sa_steps: int = _UNSET, sa_batch: int = _UNSET,
+                 alphas: Sequence[float] = _UNSET,
+                 split_fifo_ctrl_delay: float = _UNSET,
                  max_workers: Optional[int] = None,
                  emulate_cycles: int = 0, use_pallas: bool = True,
-                 shard: Optional[bool] = None, seed: int = 0,
+                 shard: Optional[bool] = None, seed: int = _UNSET,
                  route_strategy: str = "auto",
-                 reg_penalty: float = 4.0,
+                 reg_penalty: float = _UNSET,
                  pipeline_emulation: bool = True,
-                 io_chunk: Optional[int] = None):
+                 io_chunk: Optional[int] = None,
+                 store: Any = None):
         self.apps = apps or BENCH_APPS
-        self.sa_steps = sa_steps
-        self.sa_batch = sa_batch
-        self.alphas = tuple(alphas)
-        self.split_fifo_ctrl_delay = split_fifo_ctrl_delay
+        self.sa_steps = self._folded_knob("sa_steps", sa_steps)
+        self.sa_batch = self._folded_knob("sa_batch", sa_batch)
+        self.alphas = tuple(self._folded_knob("alphas", alphas))
+        self.split_fifo_ctrl_delay = self._folded_knob(
+            "split_fifo_ctrl_delay", split_fifo_ctrl_delay)
         self.max_workers = max_workers
         self.emulate_cycles = emulate_cycles
         self.use_pallas = use_pallas
         self.shard = shard
-        self.seed = seed
+        self.seed = self._folded_knob("seed", seed)
         #: router engine (repro.core.pnr.route): "auto" routes big fabrics
         #: with the device-batched min-plus lower bounds
         self.route_strategy = route_strategy
-        self.reg_penalty = reg_penalty
+        self.reg_penalty = self._folded_knob("reg_penalty", reg_penalty)
         self.pipeline_emulation = pipeline_emulation
         #: ext-IO streaming chunk for long stimulus traces (HBM-gridded
         #: fused kernel); None keeps the per-cycle scan
         self.io_chunk = io_chunk
+        #: persistent spec-addressed result store: a ResultStore, a root
+        #: path, False (disable even if the env names a store), or None —
+        #: attach the CANAL_RESULT_STORE store when the env var is set
+        self.store = self._open_store(store)
         self._lock = threading.Lock()
         self._ic_cache: Dict[Tuple, Any] = {}
         self._res_cache: Dict[Tuple, Any] = {}
         self._fab_cache: Dict[Tuple, Any] = {}
+        self._inflight: Dict[str, Future] = {}
         self._emu_pool: Optional[ThreadPoolExecutor] = None
         self._emu_devices: List[Any] = []
         self._emu_rr = 0
+        self._active_runs = 0
         self._pending: List[Future] = []
         self.records: List[Dict] = []
+        #: observability counters for the store-backed execution path
+        self.store_hits = 0      # records served from the store
+        self.store_misses = 0    # store consulted, nothing usable
+        self.coalesced = 0       # requests piggybacked on an in-flight one
+        self.pnr_computations = 0  # design points actually placed+routed
+
+    @staticmethod
+    def _folded_knob(name: str, value):
+        """Resolve a deprecated ``__init__`` PnR knob: unset -> the
+        executor default; explicitly passed -> deprecation pointing at
+        the spec field that replaced it (the value still applies, as the
+        default for specs that leave the field unset)."""
+        if value is _UNSET:
+            return _FOLDED_KNOB_DEFAULTS[name]
+        warnings.warn(
+            f"SweepExecutor({name}=...) is deprecated: set the spec "
+            f"field '{name}' on the design point instead — "
+            f"InterconnectSpec(..., {name}=...). The executor value is "
+            f"only a default for specs that leave '{name}' unset.",
+            DeprecationWarning, stacklevel=3)
+        return value
+
+    @staticmethod
+    def _open_store(store) -> Optional[ResultStore]:
+        if store is False:
+            return None
+        if store is None:
+            root = os.environ.get(STORE_ENV)
+            return ResultStore(root) if root else None
+        if isinstance(store, ResultStore):
+            return store
+        return ResultStore(str(store))
 
     # ------------------------------------------------------------- caches
     @staticmethod
@@ -204,10 +257,14 @@ class SweepExecutor:
 
     def _submit_emulation(self, fab, routed: List[Tuple[str, Any, Any]],
                           out: Dict[str, Dict],
-                          io_chunk: Optional[int] = None) -> Future:
+                          io_chunk: Optional[int] = None,
+                          on_done: Optional[Callable[[], None]] = None
+                          ) -> Future:
         """Dispatch one design point's emulation batch asynchronously; the
-        returned future merges the report into ``out`` when done. Router
-        threads keep running while the device sweeps."""
+        returned future merges the report into ``out`` when done (then
+        runs ``on_done`` — the store write-back hook, so a record is only
+        persisted once complete). Router threads keep running while the
+        device sweeps."""
         pool, dev = self._emu_queue()
 
         def work():
@@ -215,6 +272,8 @@ class SweepExecutor:
                                       io_chunk=io_chunk)
             for name, info in emu.items():
                 out[name]["emulation"] = info
+            if on_done is not None:
+                on_done()
 
         fut = pool.submit(work)
         with self._lock:
@@ -223,9 +282,14 @@ class SweepExecutor:
 
     def join_pending(self) -> None:
         """Block until every dispatched emulation batch has merged its
-        report (re-raising the first worker error), then release the
+        report (re-raising the first worker error — with a shared
+        executor this may conservatively wait on, and surface errors
+        from, another concurrent sweep's batches), then release the
         queue threads — the pool is rebuilt lazily on the next dispatch,
-        so repeated sweeps don't accumulate idle workers."""
+        so repeated sweeps don't accumulate idle workers. The pool is
+        only torn down while no ``run_points`` call is active: a
+        concurrent sweep must never have its dispatch land on a pool
+        another sweep just shut down."""
         try:
             while True:
                 with self._lock:
@@ -235,7 +299,10 @@ class SweepExecutor:
                 fut.result()
         finally:
             with self._lock:
-                pool, self._emu_pool = self._emu_pool, None
+                idle = self._active_runs == 0
+                pool = self._emu_pool if idle else None
+                if idle:
+                    self._emu_pool = None
             if pool is not None:
                 pool.shutdown(wait=True)
 
@@ -285,35 +352,122 @@ class SweepExecutor:
                             "out_checksum": checksum}
         return report
 
+    # -------------------------------------------------- store-backed flow
+    def resolve(self, point) -> InterconnectSpec:
+        """Pin a design point for execution: fill every PnR knob the spec
+        leaves unset with this executor's default. The resolved spec's
+        ``digest()`` fully determines the resulting record — it is the
+        address in the persistent :class:`ResultStore` (its
+        ``hardware_digest()`` is unchanged, so compiled-artifact caches
+        still pool across knob variants)."""
+        return _as_spec(point).with_execution_defaults(
+            route_strategy=self.route_strategy,
+            reg_penalty=self.reg_penalty, alphas=self.alphas,
+            sa_steps=self.sa_steps, sa_batch=self.sa_batch,
+            seed=self.seed,
+            split_fifo_ctrl_delay=self.split_fifo_ctrl_delay)
+
+    def record_usable(self, rec: Dict) -> bool:
+        """Whether a stored record covers this executor's workload: same
+        app set, and at least the requested emulation (a record computed
+        without emulation cannot serve an emulating executor). The single
+        definition of a store *hit* — the serving layer delegates here."""
+        return (set(rec.get("apps", {})) == set(self.apps)
+                and (self.emulate_cycles == 0
+                     or rec.get("emulate_cycles") == self.emulate_cycles))
+
+    def _store_lookup(self, digest: str) -> Optional[Dict]:
+        """Consult the store; unusable records (see :meth:`record_usable`)
+        are misses and get recomputed + overwritten."""
+        if self.store is None:
+            return None
+        rec = self.store.get(digest)
+        usable = rec is not None and self.record_usable(rec)
+        with self._lock:
+            if usable:
+                self.store_hits += 1
+            else:
+                self.store_misses += 1
+        return rec if usable else None
+
+    def _store_put(self, spec: InterconnectSpec, rec: Dict) -> None:
+        if self.store is not None:
+            self.store.put(spec, rec)
+
     def run_point(self, point,
                   extra: Optional[Dict] = None,
                   defer_emulation: bool = False) -> Dict:
-        """PnR every app on one design point; emit a sweep record.
+        """One design point -> one sweep record, store-backed.
 
         ``point`` is an :class:`InterconnectSpec` (or a legacy kwargs
-        dict, canonicalized into one). Spec route/emulation knobs
-        (``route_strategy``, ``auto_min_tiles``, ``emulate_io_chunk``)
-        override the executor defaults for this point.
+        dict, canonicalized into one); unset spec knobs resolve against
+        the executor defaults (:meth:`resolve`). The resolved digest is
+        consulted in the persistent store first (a hit skips PnR and
+        emulation entirely); concurrent requests for the same digest
+        coalesce onto one in-flight computation; completed records are
+        written back to the store.
 
         ``defer_emulation`` dispatches the emulation batch to the async
         per-device queue instead of running it inline; the record's
         ``emulation`` entries appear once the future lands (callers join
-        via :meth:`join_pending` — :meth:`run_points` does)."""
+        via :meth:`join_pending` — :meth:`run_points` does), and the
+        store write-back rides on that future."""
+        spec = self.resolve(point)
+        digest = spec.digest()
+        with self._lock:
+            leader = digest not in self._inflight
+            if leader:
+                fut = self._inflight[digest] = Future()
+            else:
+                fut = self._inflight[digest]
+        if not leader:
+            rec = fut.result()
+            with self._lock:
+                self.coalesced += 1
+            return self._finish_record(rec, extra)
+        try:
+            rec = self._store_lookup(digest)
+            if rec is None:
+                rec = self._compute_point(spec, digest, defer_emulation)
+            fut.set_result(rec)
+        except BaseException as e:
+            fut.set_exception(e)
+            raise
+        finally:
+            with self._lock:
+                self._inflight.pop(digest, None)
+        return self._finish_record(rec, extra)
+
+    @staticmethod
+    def _finish_record(rec: Dict, extra: Optional[Dict]) -> Dict:
+        """Per-caller view of a (possibly shared) record: sweep labels
+        (``extra``) merge into a shallow copy, so one stored record can
+        serve grids that label it differently. Nested app dicts stay
+        shared — a deferred emulation merge lands in every view."""
+        out = dict(extra or {})
+        out.update(rec)
+        return out
+
+    def _compute_point(self, spec: InterconnectSpec, digest: str,
+                       defer_emulation: bool) -> Dict:
+        """The actual PnR + emulation work for a store miss. All PnR
+        knobs come off the resolved ``spec`` — the digest is the whole
+        story of how this record was produced."""
         t0 = time.perf_counter()
-        spec = _as_spec(point)
+        with self._lock:
+            self.pnr_computations += 1
         ic = self.interconnect(spec)
         key = self._key(spec)
-        res = self.resources(ic, key)
-        strategy = spec.route_strategy or self.route_strategy
+        res = self.resources(ic, key, reg_penalty=spec.reg_penalty)
         out: Dict[str, Dict] = {}
         routed: List[Tuple[str, Any, Any]] = []
         for name, mk in self.apps.items():
             app = mk()
             r = place_and_route(
-                ic, app, alphas=self.alphas, sa_steps=self.sa_steps,
-                sa_batch=self.sa_batch, resources=res, seed=self.seed,
-                split_fifo_ctrl_delay=self.split_fifo_ctrl_delay,
-                route_strategy=strategy,
+                ic, app, alphas=spec.alphas, sa_steps=spec.sa_steps,
+                sa_batch=spec.sa_batch, resources=res, seed=spec.seed,
+                split_fifo_ctrl_delay=spec.split_fifo_ctrl_delay,
+                route_strategy=spec.route_strategy,
                 auto_min_tiles=spec.auto_min_tiles)
             out[name] = {
                 "success": r.success,
@@ -328,27 +482,35 @@ class SweepExecutor:
             }
             if r.success and self.emulate_cycles:
                 routed.append((name, r.packed, r))
-        rec: Dict = dict(extra or {})
-        rec["spec_digest"] = spec.digest()
-        rec["apps"] = out
-        rec["sb_area"] = switch_box_area(ic)
-        rec["cb_area"] = connection_box_area(ic)
-        if routed:
+        rec: Dict = {"spec_digest": digest,
+                     "hardware_digest": spec.hardware_digest(),
+                     "apps": out,
+                     "sb_area": switch_box_area(ic),
+                     "cb_area": connection_box_area(ic),
+                     "emulate_cycles": self.emulate_cycles}
+        if routed and not defer_emulation:
             fab = self.fabric(ic, key)
-            io_chunk = spec.emulate_io_chunk or self.io_chunk
-            if defer_emulation:
-                self._submit_emulation(fab, routed, out, io_chunk=io_chunk)
-            else:
-                emu = self._emulate_batch(fab, routed, io_chunk=io_chunk)
-                for name, info in emu.items():
-                    out[name]["emulation"] = info
+            emu = self._emulate_batch(
+                fab, routed, io_chunk=spec.emulate_io_chunk or self.io_chunk)
+            for name, info in emu.items():
+                out[name]["emulation"] = info
         # wall time includes interconnect generation (cache misses pay it,
         # cache hits legitimately report the shared-cache speedup); with
         # deferred emulation it covers host PnR only — emulation overlaps
         rec["gen_pnr_seconds"] = time.perf_counter() - t0
+        if routed and defer_emulation:
+            # persist only once the emulation report has merged — the
+            # store must never serve a half-built record
+            self._submit_emulation(
+                self.fabric(ic, key), routed, out,
+                io_chunk=spec.emulate_io_chunk or self.io_chunk,
+                on_done=lambda: self._store_put(spec, rec))
+        else:
+            self._store_put(spec, rec)
         return rec
 
-    def run_points(self, points: Sequence[Tuple[Any, Dict]]) -> List[Dict]:
+    def run_points(self, points: Sequence[Tuple[Any, Dict]],
+                   record: bool = True) -> List[Dict]:
         """The generic sweep driver: evaluate ``(point, extra)`` design
         points — points are :class:`InterconnectSpec` objects (see
         :func:`repro.core.spec.spec_grid` for declarative grids) or
@@ -357,11 +519,17 @@ class SweepExecutor:
 
         With ``pipeline_emulation`` the device emulation of point k runs
         under the host PnR of point k+1 (async dispatch); every emulation
-        future is joined before the records are returned."""
+        future is joined before the records are returned.
+
+        ``record=False`` skips the ``self.records`` accumulator (the
+        :meth:`save_json` batch workflow) — long-lived callers like the
+        serving layer would otherwise grow it without bound."""
         workers = self.max_workers
         if workers is None:
             workers = min(len(points), os.cpu_count() or 1, 4)
         defer = self.pipeline_emulation and self.emulate_cycles > 0
+        with self._lock:
+            self._active_runs += 1
         try:
             if workers <= 1 or len(points) <= 1:
                 recs = [self.run_point(kw, extra, defer_emulation=defer)
@@ -372,19 +540,51 @@ class SweepExecutor:
                             for kw, extra in points]
                     recs = [f.result() for f in futs]
         finally:
+            with self._lock:
+                self._active_runs -= 1
             self.join_pending()
-        self.records.extend(recs)
+        if record:
+            self.records.extend(recs)
         return recs
 
+    @staticmethod
+    def _record_key(rec: Dict) -> Tuple:
+        """Dedup identity of a sweep record: the resolved spec digest
+        (which pins every PnR knob — α sweep included) plus the app set.
+        Records predating the digest field fall back to object identity
+        so nothing is silently merged."""
+        digest = rec.get("spec_digest")
+        if digest is None:
+            return ("id", id(rec))
+        return (digest, tuple(sorted(rec.get("apps", {}))))
+
+    def dedup_records(self) -> List[Dict]:
+        """Accumulated records with repeats collapsed: repeated
+        ``sweep_*`` calls on one executor re-deliver the same design
+        point (now often straight from the store); only the newest record
+        per ``(spec_digest, apps)`` survives, at its first position."""
+        out: List[Dict] = []
+        pos: Dict[Tuple, int] = {}
+        for rec in self.records:
+            k = self._record_key(rec)
+            if k in pos:
+                out[pos[k]] = rec
+            else:
+                pos[k] = len(out)
+                out.append(rec)
+        return out
+
     def save_json(self, path: str) -> str:
-        """Persist accumulated records (consumed by benchmarks/run.py).
-        Joins any still-pending emulation futures first."""
+        """Persist accumulated records (consumed by benchmarks/run.py),
+        deduplicated (:meth:`dedup_records` — repeated sweeps no longer
+        re-persist overlapping records). Joins any still-pending
+        emulation futures first."""
         self.join_pending()
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
         with open(path, "w") as f:
-            json.dump(self.records, f, indent=2, default=str)
+            json.dump(self.dedup_records(), f, indent=2, default=str)
         return path
 
 
@@ -401,7 +601,12 @@ def _executor_for(executor: Optional[SweepExecutor],
         return executor
     if sa_steps is None:
         return SweepExecutor(apps=apps)
-    return SweepExecutor(apps=apps, sa_steps=sa_steps)
+    # sweep-function convenience path: route the legacy sa_steps override
+    # through the executor default without re-warning (the per-call knob
+    # is this helper's documented contract; direct __init__ use warns)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return SweepExecutor(apps=apps, sa_steps=sa_steps)
 
 
 def fifo_area_study(num_tracks: int = 5, track_width: int = 16

@@ -93,6 +93,17 @@ class InterconnectSpec:
     auto_min_tiles: Optional[int] = None
     #: ext-IO streaming chunk for batched emulation; None = caller default
     emulate_io_chunk: Optional[int] = None
+    # PnR knobs folded from SweepExecutor (PR 5): a design point now fully
+    # describes *how* it is placed and routed, so its digest addresses the
+    # persistent result store. None = caller/executor default. All are
+    # digest-optional (see DIGEST_OPTIONAL): while unset they are omitted
+    # from the canonical JSON, keeping pre-existing digests stable.
+    reg_penalty: Optional[float] = None        # router register-hop penalty
+    alphas: Optional[Tuple[float, ...]] = None  # placement α sweep (§3.4)
+    sa_steps: Optional[int] = None             # annealing steps
+    sa_batch: Optional[int] = None             # annealing batch
+    seed: Optional[int] = None                 # place/route RNG seed
+    split_fifo_ctrl_delay: Optional[float] = None  # split-FIFO ctrl ns
 
     def __post_init__(self):
         # canonicalize before freezing semantics: str -> enum, dict/list ->
@@ -121,6 +132,23 @@ class InterconnectSpec:
             raise ValueError(
                 f"route_strategy must be one of {_ROUTE_STRATEGIES}, "
                 f"got {self.route_strategy!r}")
+        if self.alphas is not None:
+            object.__setattr__(self, "alphas",
+                               tuple(float(a) for a in self.alphas))
+            if not self.alphas:
+                raise ValueError("alphas must be non-empty when set")
+        for name in ("reg_penalty", "split_fifo_ctrl_delay"):
+            v = getattr(self, name)
+            if v is not None:
+                object.__setattr__(self, name, float(v))
+        for name in ("sa_steps", "sa_batch", "seed"):
+            v = getattr(self, name)
+            if v is not None:
+                object.__setattr__(self, name, int(v))
+        if self.sa_steps is not None and self.sa_steps < 0:
+            raise ValueError("sa_steps must be >= 0")
+        if self.sa_batch is not None and self.sa_batch < 1:
+            raise ValueError("sa_batch must be >= 1")
 
     # -- derived views --------------------------------------------------------
     def sb_connection_sides(self) -> Tuple[Side, ...]:
@@ -168,20 +196,42 @@ class InterconnectSpec:
     def from_json(cls, s: str) -> "InterconnectSpec":
         return cls.from_dict(json.loads(s))
 
+    #: fields added after the digest schema was frozen (PR 4): they are
+    #: omitted from the canonical JSON while they hold their default, so
+    #: growing the spec never drifts the digests of pre-existing design
+    #: points (the committed golden fixtures included). Append-only.
+    DIGEST_OPTIONAL = ("reg_penalty", "alphas", "sa_steps", "sa_batch",
+                       "seed", "split_fifo_ctrl_delay")
+
+    def canonical_dict(self) -> Dict[str, object]:
+        """The digest's view of the spec: :meth:`to_dict` minus any
+        ``DIGEST_OPTIONAL`` field still at its default (forward-compatible
+        digest schema — new knobs only show up once actually set)."""
+        defaults = {f.name: f.default for f in fields(self)}
+        d = self.to_dict()
+        for name in self.DIGEST_OPTIONAL:
+            if getattr(self, name) == defaults[name]:
+                d.pop(name, None)
+        return d
+
+    def canonical_json(self) -> str:
+        return json.dumps(self.canonical_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
     def digest(self) -> str:
         """Stable content address of this design point: sha256 over the
         canonical (sorted-keys, no-whitespace) JSON form. Key-order and
         process independent — the cache key for every spec-addressed
-        store (DSE records, golden fixtures, future served results)."""
-        canon = json.dumps(self.to_dict(), sort_keys=True,
-                           separators=(",", ":"))
-        return hashlib.sha256(canon.encode()).hexdigest()
+        store (DSE records, golden fixtures, served results)."""
+        return hashlib.sha256(self.canonical_json().encode()).hexdigest()
 
     #: fields that tune *how* a point is evaluated, not what hardware it
     #: is — excluded from hardware_digest() so IR/resources/fabric caches
     #: are shared across e.g. router-strategy comparisons
     EXECUTION_KNOBS = ("route_strategy", "auto_min_tiles",
-                      "emulate_io_chunk")
+                       "emulate_io_chunk", "reg_penalty", "alphas",
+                       "sa_steps", "sa_batch", "seed",
+                       "split_fifo_ctrl_delay")
 
     def hardware_spec(self) -> "InterconnectSpec":
         """This spec with the execution knobs cleared: two points that
@@ -197,6 +247,21 @@ class InterconnectSpec:
     def replace(self, **overrides) -> "InterconnectSpec":
         """Functional update (the spec itself is frozen)."""
         return replace(self, **overrides)
+
+    def with_execution_defaults(self, **defaults) -> "InterconnectSpec":
+        """Fill *unset* (None) execution knobs from ``defaults`` and
+        return the resolved spec. This is how the DSE executor pins a
+        design point before addressing the persistent result store: the
+        resolved digest then fully determines the stored record instead
+        of leaking executor state. Knobs the spec already sets win;
+        ``None`` defaults are skipped; non-knob names are rejected."""
+        unknown = sorted(set(defaults) - set(self.EXECUTION_KNOBS))
+        if unknown:
+            raise TypeError(f"not execution knobs: {unknown}; "
+                            f"knobs: {sorted(self.EXECUTION_KNOBS)}")
+        updates = {k: v for k, v in defaults.items()
+                   if v is not None and getattr(self, k) is None}
+        return replace(self, **updates) if updates else self
 
 
 def spec_from_kwargs(**kwargs) -> InterconnectSpec:

@@ -1,0 +1,238 @@
+"""Spec-addressed persistent DSE result store.
+
+Every design point has a canonical content address — ``spec.digest()``
+(see :mod:`repro.core.spec`) — and this module makes that address the
+key of an on-disk store of PnR/emulation/area records, so results
+survive the process that computed them: a repeated sweep, a benchmark
+re-run, or a :class:`repro.serve.dse_service.DSEService` query hits the
+store instead of re-routing the same hardware (the artifact-reuse
+discipline of cached-partition FPGA flows, applied to Canal's DSE).
+
+Layout on disk (one JSON file per digest, atomically replaced)::
+
+    <root>/
+      records/<spec_digest>.json        # versioned envelope + record
+      by_hardware/<hardware_digest>/<spec_digest>   # secondary index
+
+The ``by_hardware`` index groups execution-knob variants (router
+strategy, α sweep, annealing budget, ...) of the same hardware, making
+them enumerable via :meth:`ResultStore.for_hardware`.
+
+Durability rules:
+
+* writes are atomic (`os.replace` of a same-directory temp file), so a
+  crashed writer can never leave a half-record under the digest path;
+* loads are corruption-tolerant: truncated/garbled/wrong-schema files
+  count as misses (and are tallied in ``stats()``), never raise;
+* the envelope carries a schema version stamp; unknown versions are
+  treated as misses so future schema changes stay forward-compatible.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+import threading
+from typing import Dict, Iterator, List, Optional
+
+from .spec import InterconnectSpec
+
+#: bump when the envelope layout changes incompatibly; readers treat any
+#: other version as a miss rather than guessing
+SCHEMA_VERSION = 1
+
+#: env var naming the default store root (CI points it at a cached dir)
+STORE_ENV = "CANAL_RESULT_STORE"
+
+#: default on-disk location when neither an explicit root nor the env
+#: var is given (relative to the working directory, like a build cache)
+DEFAULT_ROOT = ".canal_store"
+
+_DIGEST_RE = re.compile(r"^[0-9a-f]{64}$")
+
+
+def default_store_root() -> str:
+    """The store root honoring the ``CANAL_RESULT_STORE`` override."""
+    return os.environ.get(STORE_ENV) or DEFAULT_ROOT
+
+
+class ResultStore:
+    """Content-addressed persistent map ``spec.digest() -> DSE record``.
+
+    Thread-safe; cheap to construct (directories are created lazily on
+    first write, so opening a store never litters the filesystem).
+    """
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = os.path.abspath(root or default_store_root())
+        self._records = os.path.join(self.root, "records")
+        self._by_hw = os.path.join(self.root, "by_hardware")
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.corrupt = 0
+        self.writes = 0
+
+    # --------------------------------------------------------------- paths
+    @staticmethod
+    def _check_digest(digest: str) -> str:
+        if not isinstance(digest, str) or not _DIGEST_RE.match(digest):
+            raise ValueError(f"not a sha256 hex digest: {digest!r}")
+        return digest
+
+    def _record_path(self, digest: str) -> str:
+        return os.path.join(self._records, f"{digest}.json")
+
+    # --------------------------------------------------------------- reads
+    def get(self, key) -> Optional[Dict]:
+        """The stored record for ``key`` (a digest string or an
+        :class:`InterconnectSpec`), or None on miss. A file that fails to
+        parse, carries an unknown schema version, or misrecords its own
+        digest is a *miss*, not an error — a corrupted cache must never
+        poison or abort a sweep."""
+        digest = self._as_digest(key)
+        env = self._load_envelope(self._record_path(digest))
+        with self._lock:
+            if env is None or env.get("spec_digest") != digest:
+                if env is not None:
+                    self.corrupt += 1
+                self.misses += 1
+                return None
+            self.hits += 1
+        return env["record"]
+
+    def _load_envelope(self, path: str) -> Optional[Dict]:
+        try:
+            with open(path) as f:
+                env = json.load(f)
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+            if os.path.exists(path):
+                with self._lock:
+                    self.corrupt += 1
+            return None
+        if (not isinstance(env, dict)
+                or env.get("schema") != SCHEMA_VERSION
+                or not isinstance(env.get("record"), dict)):
+            with self._lock:
+                self.corrupt += 1
+            return None
+        return env
+
+    def __contains__(self, key) -> bool:
+        """True iff :meth:`get` would serve a record — a corrupt or
+        foreign-schema file under the digest path does not count (mere
+        file existence must not talk a caller out of recomputing)."""
+        digest = self._as_digest(key)
+        env = self._load_envelope(self._record_path(digest))
+        return env is not None and env.get("spec_digest") == digest
+
+    def __len__(self) -> int:
+        try:
+            return sum(1 for _ in self.digests())
+        except OSError:
+            return 0
+
+    def digests(self) -> Iterator[str]:
+        """Every digest with a committed record file (temp files and
+        foreign droppings are skipped — only ``<sha256>.json`` counts)."""
+        try:
+            names = os.listdir(self._records)
+        except OSError:
+            return
+        for name in sorted(names):
+            stem, ext = os.path.splitext(name)
+            if ext == ".json" and _DIGEST_RE.match(stem):
+                yield stem
+
+    def for_hardware(self, key) -> List[Dict]:
+        """All stored records whose spec compiles to the given hardware
+        (``key``: a ``hardware_digest()`` string or a spec) — the
+        execution-knob variants of one design, enumerable e.g. for
+        router-strategy or α-sweep comparisons. Corrupt/missing entries
+        are skipped."""
+        if isinstance(key, InterconnectSpec):
+            hw = key.hardware_digest()
+        else:
+            hw = self._check_digest(key)
+        try:
+            names = sorted(os.listdir(os.path.join(self._by_hw, hw)))
+        except OSError:
+            return []
+        out = []
+        for name in names:
+            if _DIGEST_RE.match(name):
+                rec = self.get(name)
+                if rec is not None:
+                    out.append(rec)
+        return out
+
+    # -------------------------------------------------------------- writes
+    def put(self, spec_or_digest, record: Dict,
+            hardware_digest: Optional[str] = None,
+            spec_dict: Optional[Dict] = None) -> str:
+        """Persist ``record`` under the design point's content address.
+
+        Pass the :class:`InterconnectSpec` when available — the envelope
+        then embeds the spec JSON (the store is self-describing: a record
+        can be re-queried or re-verified without the producing process)
+        and the hardware index is maintained automatically. With a bare
+        digest string, ``hardware_digest``/``spec_dict`` are optional
+        extras. Returns the digest written."""
+        if isinstance(spec_or_digest, InterconnectSpec):
+            spec = spec_or_digest
+            digest = spec.digest()
+            hardware_digest = spec.hardware_digest()
+            spec_dict = spec.canonical_dict()
+        else:
+            digest = self._check_digest(spec_or_digest)
+            if hardware_digest is not None:
+                self._check_digest(hardware_digest)
+        env = {"schema": SCHEMA_VERSION, "spec_digest": digest,
+               "hardware_digest": hardware_digest, "spec": spec_dict,
+               "record": record}
+        os.makedirs(self._records, exist_ok=True)
+        self._atomic_write(self._record_path(digest), env)
+        if hardware_digest is not None:
+            hw_dir = os.path.join(self._by_hw, hardware_digest)
+            os.makedirs(hw_dir, exist_ok=True)
+            marker = os.path.join(hw_dir, digest)
+            if not os.path.exists(marker):
+                with open(marker, "w"):
+                    pass
+        with self._lock:
+            self.writes += 1
+        return digest
+
+    def _atomic_write(self, path: str, payload: Dict) -> None:
+        """Same-directory temp file + ``os.replace``: readers only ever
+        see absent or complete files, even across a writer crash."""
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=".tmp-", suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True,
+                          default=str)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # --------------------------------------------------------------- misc
+    @staticmethod
+    def _as_digest(key) -> str:
+        if isinstance(key, InterconnectSpec):
+            return key.digest()
+        return ResultStore._check_digest(key)
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            return {"root": self.root, "records": len(self),
+                    "hits": self.hits, "misses": self.misses,
+                    "corrupt": self.corrupt, "writes": self.writes}
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"ResultStore({self.root!r}, records={len(self)})"

@@ -1,0 +1,234 @@
+"""DSE serving front end: spec in, record out, store-backed.
+
+The ROADMAP's north star is serving DSE results at traffic, not just
+computing them in batch jobs. :class:`DSEService` is that serving path:
+a thread-safe query front end over the spec-addressed persistent
+:class:`repro.core.store.ResultStore`, with one shared
+:class:`repro.core.dse.SweepExecutor` behind it.
+
+Request lifecycle for ``query(spec | [specs])``:
+
+1. every spec is resolved against the executor defaults and addressed
+   by its digest;
+2. digests already in flight (another query computing them right now)
+   are *coalesced* — the request piggybacks on the existing computation
+   instead of duplicating it;
+3. remaining digests are probed in the store (warm hits return without
+   touching PnR at all);
+4. only the residue of true misses is batched through the executor in
+   one ``run_points`` call (shared caches, concurrent points, batched
+   device emulation), and written back to the store for the next query.
+
+``submit`` returns a future (the service runs queries on an internal
+pool), ``query_async`` bridges that future into asyncio, and
+``stats()`` reports hit/miss/coalescing counts and query latency.
+
+Construct via ``canal.serve(...)``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+from repro.core.dse import SweepExecutor, _as_spec
+from repro.core.spec import InterconnectSpec
+from repro.core.store import ResultStore
+
+Request = Union[InterconnectSpec, Dict, Sequence]
+
+
+class DSEService:
+    """Coalescing query service over the persistent DSE result store."""
+
+    def __init__(self, store: Optional[ResultStore] = None,
+                 executor: Optional[SweepExecutor] = None,
+                 max_query_workers: int = 4,
+                 **executor_kwargs):
+        if executor is not None and executor_kwargs:
+            raise TypeError("pass executor kwargs or a prebuilt executor, "
+                            "not both")
+        if executor is None:
+            executor = SweepExecutor(
+                store=store if store is not None else ResultStore(),
+                **executor_kwargs)
+        elif store is not None and executor.store is not store:
+            raise ValueError("executor already carries a different store")
+        # a caller-provided executor is taken as configured — including
+        # store=False/None (deliberately cold runs); the service then
+        # still coalesces, it just never serves from disk
+        self.executor = executor
+        self.store = executor.store
+        self._pool = ThreadPoolExecutor(max_workers=max_query_workers,
+                                        thread_name_prefix="dse-serve")
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, Future] = {}
+        self.queries = 0
+        self.specs_served = 0
+        self.hits = 0            # served straight from the store
+        self.misses = 0          # required a PnR computation
+        self.coalesced = 0       # piggybacked on an in-flight digest
+        self._latency_total = 0.0
+        self._latency_max = 0.0
+
+    # ---------------------------------------------------------------- query
+    def query(self, request: Request) -> Union[Dict, List[Dict]]:
+        """Resolve one spec (or a batch of specs / legacy kwargs dicts)
+        to DSE records. Single request in -> single record out; sequence
+        in -> list out, order preserved."""
+        single = isinstance(request, (InterconnectSpec, dict))
+        reqs = [request] if single else list(request)
+        t0 = time.perf_counter()
+        recs = self._query_batch(reqs)
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.queries += 1
+            self.specs_served += len(reqs)
+            self._latency_total += dt
+            self._latency_max = max(self._latency_max, dt)
+        return recs[0] if single else recs
+
+    def _query_batch(self, reqs: List[Request]) -> List[Dict]:
+        resolved = [self.executor.resolve(r) for r in reqs]
+        digests = [s.digest() for s in resolved]
+        results: Dict[str, Dict] = {}
+        waits: Dict[str, Future] = {}
+        claims: List[InterconnectSpec] = []
+        # classification is O(1) per digest under the lock; store probes
+        # (disk reads) happen outside it so concurrent queries don't
+        # serialize on each other's I/O
+        with self._lock:
+            claimed = set()
+            for spec, digest in zip(resolved, digests):
+                if digest in waits or digest in claimed:
+                    continue
+                fut = self._inflight.get(digest)
+                if fut is not None:
+                    waits[digest] = fut
+                    self.coalesced += 1
+                else:
+                    self._inflight[digest] = Future()
+                    claimed.add(digest)
+                    claims.append(spec)
+        miss_specs: List[InterconnectSpec] = []
+        for spec in claims:
+            digest = spec.digest()
+            rec = self._probe_store(digest)
+            if rec is not None:
+                results[digest] = rec
+                with self._lock:
+                    self.hits += 1
+                    fut = self._inflight.pop(digest, None)
+                if fut is not None:
+                    fut.set_result(rec)
+            else:
+                miss_specs.append(spec)
+                with self._lock:
+                    self.misses += 1
+        failure: Optional[BaseException] = None
+        try:
+            if miss_specs:
+                # one batched executor pass over the misses only: shared
+                # IR/resource caches, concurrent points, device emulation.
+                # record=False: the serving path must not grow the batch
+                # workflow's save_json accumulator without bound
+                recs = self.executor.run_points(
+                    [(s, {}) for s in miss_specs], record=False)
+                for spec, rec in zip(miss_specs, recs):
+                    d = spec.digest()
+                    results[d] = rec
+                    with self._lock:
+                        fut = self._inflight.pop(d, None)
+                    if fut is not None:
+                        fut.set_result(rec)
+                miss_specs = []
+        except BaseException as e:
+            failure = e
+            raise
+        finally:
+            # failure path: unblock coalesced waiters with the real
+            # exception instead of hanging them (or hiding the cause)
+            for spec in miss_specs:
+                with self._lock:
+                    fut = self._inflight.pop(spec.digest(), None)
+                if fut is not None and not fut.done():
+                    fut.set_exception(failure or RuntimeError(
+                        f"computation for {spec.digest()} abandoned"))
+        for digest, fut in waits.items():
+            results[digest] = fut.result()
+        return [dict(results[d]) for d in digests]
+
+    def _probe_store(self, digest: str) -> Optional[Dict]:
+        """Warm-path probe, delegating the record-usability predicate to
+        the executor (one definition of "covers this workload" — app set
+        + emulation context — shared with ``run_point``'s lookup)."""
+        if self.store is None:
+            return None
+        rec = self.store.get(digest)
+        if rec is not None and self.executor.record_usable(rec):
+            return rec
+        return None
+
+    # ---------------------------------------------------------------- async
+    def submit(self, request: Request) -> Future:
+        """Asynchronous :meth:`query`: returns a
+        :class:`concurrent.futures.Future` resolving to the record(s)."""
+        return self._pool.submit(self.query, request)
+
+    async def query_async(self, request: Request):
+        """:meth:`query` bridged into asyncio (awaitable)."""
+        import asyncio
+        return await asyncio.wrap_future(self.submit(request))
+
+    # ----------------------------------------------------------------- misc
+    def warm(self, requests: Sequence[Request]) -> Dict[str, int]:
+        """Cache-warming pass: compute-and-store every request, report
+        how much was already warm."""
+        before = self.hits
+        self.query(list(requests))
+        return {"requested": len(requests),
+                "already_warm": self.hits - before}
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            q = max(self.queries, 1)
+            return {
+                "queries": self.queries,
+                "specs_served": self.specs_served,
+                "hits": self.hits, "misses": self.misses,
+                "coalesced": self.coalesced,
+                "hit_rate": self.hits / max(self.hits + self.misses, 1),
+                "latency_avg_s": self._latency_total / q,
+                "latency_max_s": self._latency_max,
+                "executor": {
+                    "store_hits": self.executor.store_hits,
+                    "store_misses": self.executor.store_misses,
+                    "coalesced": self.executor.coalesced,
+                    "pnr_computations": self.executor.pnr_computations,
+                },
+                "store": (self.store.stats() if self.store is not None
+                          else None),
+            }
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "DSEService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def serve(store: Optional[Union[ResultStore, str]] = None,
+          **kwargs) -> DSEService:
+    """Build a :class:`DSEService` (exported as ``canal.serve``).
+
+    ``store`` is a :class:`ResultStore`, a root path, or None (honor
+    ``CANAL_RESULT_STORE``, else ``.canal_store``); remaining kwargs go
+    to the underlying :class:`SweepExecutor` (``apps=``,
+    ``emulate_cycles=``, ...)."""
+    if isinstance(store, str):
+        store = ResultStore(store)
+    return DSEService(store=store, **kwargs)
