@@ -35,7 +35,14 @@ def append_bench(name: str, record: Dict) -> str:
     trajectory file (a JSON list that grows run over run — the
     append-style perf history the roadmap tracks, as opposed to the
     overwritten snapshots under ``benchmarks/results/``). A corrupt or
-    non-list file is restarted rather than crashing the benchmark."""
+    non-list file is restarted rather than crashing the benchmark.
+
+    The write is atomic (unique same-directory temp file + ``os.replace``)
+    so readers never see a torn file; the read-modify-write itself is not
+    locked, so two benchmark runs racing on the same trajectory resolve
+    last-writer-wins (one appended record may be dropped)."""
+    from repro.core.store import atomic_write_json
+
     path = os.path.join(REPO_ROOT, f"{name}.json")
     try:
         with open(path) as f:
@@ -45,8 +52,5 @@ def append_bench(name: str, record: Dict) -> str:
     except (OSError, json.JSONDecodeError):
         history = []
     history.append(dict(record, ts=time.time()))
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(history, f, indent=2, default=str)
-    os.replace(tmp, path)
+    atomic_write_json(path, history)
     return path

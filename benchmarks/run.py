@@ -10,6 +10,11 @@ spec-addressed result store (``--store``, default ``.canal_store`` /
 ``$CANAL_RESULT_STORE``), so an incremental re-run only recomputes
 design points whose spec digest is new — everything else is served from
 disk. ``--no-store`` forces every point cold.
+
+The digest addresses the *design point*, not the producing code: stored
+records survive source edits, so after changing the router/emulator run
+with ``--no-store`` (or delete the store root) to re-measure — CI gets
+this for free by salting its store cache key with ``src/**``.
 """
 from __future__ import annotations
 
@@ -45,8 +50,8 @@ def main() -> None:
         # original cold computation; only the module-level wall clocks
         # shrink on a warm store
         print(f"# result store: {os.environ[STORE_ENV]} (warm sweeps "
-              "measure serve latency; --no-store for engine timings)",
-              flush=True)
+              "measure serve latency; records survive source edits — "
+              "--no-store after changing the engines)", flush=True)
 
     from . import (dse_speed, fig08_fifo_area, fig09_topology_routability,
                    fig10_track_area, fig11_track_runtime, fig13_port_area,

@@ -258,13 +258,18 @@ class SweepExecutor:
     def _submit_emulation(self, fab, routed: List[Tuple[str, Any, Any]],
                           out: Dict[str, Dict],
                           io_chunk: Optional[int] = None,
-                          on_done: Optional[Callable[[], None]] = None
+                          on_done: Optional[Callable[[], None]] = None,
+                          pending: Optional[List[Future]] = None
                           ) -> Future:
         """Dispatch one design point's emulation batch asynchronously; the
         returned future merges the report into ``out`` when done (then
         runs ``on_done`` — the store write-back hook, so a record is only
         persisted once complete). Router threads keep running while the
-        device sweeps."""
+        device sweeps. The future is registered on the global pending
+        list (join-all via :meth:`join_pending`/:meth:`save_json`) and,
+        when ``pending`` is given, on that per-run list too — so a sweep
+        joins exactly its own batches even when several sweeps share the
+        executor."""
         pool, dev = self._emu_queue()
 
         def work():
@@ -278,25 +283,44 @@ class SweepExecutor:
         fut = pool.submit(work)
         with self._lock:
             self._pending.append(fut)
+            if pending is not None:
+                pending.append(fut)
         return fut
 
-    def join_pending(self) -> None:
-        """Block until every dispatched emulation batch has merged its
-        report (re-raising the first worker error — with a shared
-        executor this may conservatively wait on, and surface errors
-        from, another concurrent sweep's batches), then release the
+    def join_pending(self, pending: Optional[List[Future]] = None) -> None:
+        """Block until dispatched emulation batches have merged their
+        reports (re-raising the first worker error), then release the
         queue threads — the pool is rebuilt lazily on the next dispatch,
-        so repeated sweeps don't accumulate idle workers. The pool is
-        only torn down while no ``run_points`` call is active: a
-        concurrent sweep must never have its dispatch land on a pool
-        another sweep just shut down."""
+        so repeated sweeps don't accumulate idle workers.
+
+        With ``pending`` (the per-run list a ``run_points`` call threaded
+        through its dispatches) only *that run's* futures are joined —
+        a concurrent sweep on the same executor keeps ownership of its
+        own batches, and its records can never be returned with their
+        emulation still in flight. Joined futures are also retired from
+        the global list. Without ``pending`` this is a join-*all*
+        barrier over every outstanding future (the ``save_json`` /
+        close-style drain).
+
+        The pool is only torn down while no ``run_points`` call is
+        active: a concurrent sweep must never have its dispatch land on
+        a pool another sweep just shut down."""
+        source = self._pending if pending is None else pending
         try:
             while True:
                 with self._lock:
-                    if not self._pending:
+                    if not source:
                         break
-                    fut = self._pending.pop()
-                fut.result()
+                    fut = source.pop()
+                try:
+                    fut.result()
+                finally:
+                    if pending is not None:
+                        with self._lock:
+                            try:
+                                self._pending.remove(fut)
+                            except ValueError:
+                                pass
         finally:
             with self._lock:
                 idle = self._active_runs == 0
@@ -368,13 +392,30 @@ class SweepExecutor:
             split_fifo_ctrl_delay=self.split_fifo_ctrl_delay)
 
     def record_usable(self, rec: Dict) -> bool:
-        """Whether a stored record covers this executor's workload: same
-        app set, and at least the requested emulation (a record computed
-        without emulation cannot serve an emulating executor). The single
-        definition of a store *hit* — the serving layer delegates here."""
-        return (set(rec.get("apps", {})) == set(self.apps)
-                and (self.emulate_cycles == 0
-                     or rec.get("emulate_cycles") == self.emulate_cycles))
+        """Whether a stored record covers this executor's workload: the
+        exact app set (record shape must match what the sweep consumers
+        expect), and at least the requested emulation — a record emulated
+        for ``>=`` the requested cycles is a hit (its ``emulation``
+        entries then reflect the longer stored run), so executors with
+        differing ``emulate_cycles`` sharing one store converge on the
+        deepest record instead of thrashing overwrites. A record computed
+        without emulation cannot serve an emulating executor. The single
+        definition of a store *hit* — the serving layer delegates here.
+
+        App identity is *by name*: the store trusts that one app name
+        denotes one workload. Distinct workloads registered under the
+        same name against a shared store would silently serve each
+        other's records — give them distinct names (or stores). And
+        since the app-set match is exact with overwrite-on-miss,
+        executors with *different* app sets sharing one store alternate
+        misses and overwrite each other's records for the same digest —
+        use a store root per workload when app sets differ."""
+        if set(rec.get("apps", {})) != set(self.apps):
+            return False
+        if self.emulate_cycles == 0:
+            return True
+        stored = rec.get("emulate_cycles")
+        return isinstance(stored, int) and stored >= self.emulate_cycles
 
     def _store_lookup(self, digest: str) -> Optional[Dict]:
         """Consult the store; unusable records (see :meth:`record_usable`)
@@ -396,7 +437,8 @@ class SweepExecutor:
 
     def run_point(self, point,
                   extra: Optional[Dict] = None,
-                  defer_emulation: bool = False) -> Dict:
+                  defer_emulation: bool = False,
+                  pending: Optional[List[Future]] = None) -> Dict:
         """One design point -> one sweep record, store-backed.
 
         ``point`` is an :class:`InterconnectSpec` (or a legacy kwargs
@@ -409,9 +451,28 @@ class SweepExecutor:
 
         ``defer_emulation`` dispatches the emulation batch to the async
         per-device queue instead of running it inline; the record's
-        ``emulation`` entries appear once the future lands (callers join
-        via :meth:`join_pending` — :meth:`run_points` does), and the
-        store write-back rides on that future."""
+        ``emulation`` entries appear once the future lands, and the
+        store write-back rides on that future. ``pending`` is the
+        caller's per-run future list: the dispatched batch — or, for a
+        coalesced request, the leader's batch — is registered there so
+        ``join_pending(pending)`` waits on exactly the futures this
+        run's records depend on (callers without a list join-all via
+        bare :meth:`join_pending`)."""
+        # count as an active run for the whole body: the emulation-queue
+        # teardown in join_pending must not shut down a pool this call
+        # is about to dispatch on — direct deferred run_point calls need
+        # the same protection run_points gets
+        with self._lock:
+            self._active_runs += 1
+        try:
+            return self._run_point(point, extra, defer_emulation, pending)
+        finally:
+            with self._lock:
+                self._active_runs -= 1
+
+    def _run_point(self, point, extra: Optional[Dict],
+                   defer_emulation: bool,
+                   pending: Optional[List[Future]]) -> Dict:
         spec = self.resolve(point)
         digest = spec.digest()
         with self._lock:
@@ -421,21 +482,42 @@ class SweepExecutor:
             else:
                 fut = self._inflight[digest]
         if not leader:
-            rec = fut.result()
+            # in-flight futures resolve to (record, emulation-future):
+            # a follower's record may still be awaiting the leader's
+            # deferred emulation merge, so the follower must adopt that
+            # future into its own run's pending list
+            rec, emu_fut = fut.result()
             with self._lock:
                 self.coalesced += 1
+                if (emu_fut is not None and pending is not None
+                        and emu_fut not in pending):
+                    pending.append(emu_fut)
             return self._finish_record(rec, extra)
         try:
+            emu_fut = None
             rec = self._store_lookup(digest)
             if rec is None:
-                rec = self._compute_point(spec, digest, defer_emulation)
-            fut.set_result(rec)
+                rec, emu_fut = self._compute_point(
+                    spec, digest, defer_emulation, pending)
+            fut.set_result((rec, emu_fut))
         except BaseException as e:
             fut.set_exception(e)
-            raise
-        finally:
             with self._lock:
                 self._inflight.pop(digest, None)
+            raise
+        if emu_fut is None:
+            with self._lock:
+                self._inflight.pop(digest, None)
+        else:
+            # keep the in-flight entry alive until the deferred emulation
+            # has merged and the store write-back has landed: a same-digest
+            # request arriving in that tail coalesces onto this record
+            # instead of missing the store and redoing PnR + emulation
+            def _retire(_done, d=digest, f=fut):
+                with self._lock:
+                    if self._inflight.get(d) is f:
+                        del self._inflight[d]
+            emu_fut.add_done_callback(_retire)
         return self._finish_record(rec, extra)
 
     @staticmethod
@@ -449,10 +531,15 @@ class SweepExecutor:
         return out
 
     def _compute_point(self, spec: InterconnectSpec, digest: str,
-                       defer_emulation: bool) -> Dict:
+                       defer_emulation: bool,
+                       pending: Optional[List[Future]] = None
+                       ) -> Tuple[Dict, Optional[Future]]:
         """The actual PnR + emulation work for a store miss. All PnR
         knobs come off the resolved ``spec`` — the digest is the whole
-        story of how this record was produced."""
+        story of how this record was produced. Returns the record plus
+        the deferred emulation future (None when emulation ran inline
+        or there was nothing to emulate) so coalesced followers can wait
+        on it too."""
         t0 = time.perf_counter()
         with self._lock:
             self.pnr_computations += 1
@@ -498,16 +585,18 @@ class SweepExecutor:
         # cache hits legitimately report the shared-cache speedup); with
         # deferred emulation it covers host PnR only — emulation overlaps
         rec["gen_pnr_seconds"] = time.perf_counter() - t0
+        emu_fut = None
         if routed and defer_emulation:
             # persist only once the emulation report has merged — the
             # store must never serve a half-built record
-            self._submit_emulation(
+            emu_fut = self._submit_emulation(
                 self.fabric(ic, key), routed, out,
                 io_chunk=spec.emulate_io_chunk or self.io_chunk,
-                on_done=lambda: self._store_put(spec, rec))
+                on_done=lambda: self._store_put(spec, rec),
+                pending=pending)
         else:
             self._store_put(spec, rec)
-        return rec
+        return rec, emu_fut
 
     def run_points(self, points: Sequence[Tuple[Any, Dict]],
                    record: bool = True) -> List[Dict]:
@@ -519,7 +608,10 @@ class SweepExecutor:
 
         With ``pipeline_emulation`` the device emulation of point k runs
         under the host PnR of point k+1 (async dispatch); every emulation
-        future is joined before the records are returned.
+        future *this run* dispatched (or coalesced onto) is joined before
+        the records are returned — ownership is per run, so concurrent
+        ``run_points`` calls on one executor never steal each other's
+        joins or return records with emulation still in flight.
 
         ``record=False`` skips the ``self.records`` accumulator (the
         :meth:`save_json` batch workflow) — long-lived callers like the
@@ -528,21 +620,24 @@ class SweepExecutor:
         if workers is None:
             workers = min(len(points), os.cpu_count() or 1, 4)
         defer = self.pipeline_emulation and self.emulate_cycles > 0
+        pending: List[Future] = []
         with self._lock:
             self._active_runs += 1
         try:
             if workers <= 1 or len(points) <= 1:
-                recs = [self.run_point(kw, extra, defer_emulation=defer)
+                recs = [self.run_point(kw, extra, defer_emulation=defer,
+                                       pending=pending)
                         for kw, extra in points]
             else:
                 with ThreadPoolExecutor(max_workers=workers) as pool:
-                    futs = [pool.submit(self.run_point, kw, extra, defer)
+                    futs = [pool.submit(self.run_point, kw, extra, defer,
+                                        pending)
                             for kw, extra in points]
                     recs = [f.result() for f in futs]
         finally:
             with self._lock:
                 self._active_runs -= 1
-            self.join_pending()
+            self.join_pending(pending)
         if record:
             self.records.extend(recs)
         return recs
@@ -602,11 +697,14 @@ def _executor_for(executor: Optional[SweepExecutor],
     if sa_steps is None:
         return SweepExecutor(apps=apps)
     # sweep-function convenience path: route the legacy sa_steps override
-    # through the executor default without re-warning (the per-call knob
-    # is this helper's documented contract; direct __init__ use warns)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return SweepExecutor(apps=apps, sa_steps=sa_steps)
+    # through the executor default without the __init__ deprecation (the
+    # per-call knob is this helper's documented contract; direct __init__
+    # use warns). Assigning the resolved default directly avoids
+    # catch_warnings(), which mutates process-global filter state and is
+    # not thread-safe under the serving pool.
+    ex = SweepExecutor(apps=apps)
+    ex.sa_steps = sa_steps
+    return ex
 
 
 def fifo_area_study(num_tracks: int = 5, track_width: int = 16

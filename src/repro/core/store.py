@@ -57,6 +57,24 @@ def default_store_root() -> str:
     return os.environ.get(STORE_ENV) or DEFAULT_ROOT
 
 
+def atomic_write_json(path: str, payload) -> None:
+    """Same-directory temp file + ``os.replace``: readers only ever see
+    absent or complete files, even across a writer crash. The shared
+    durability idiom for store records and benchmark trajectories."""
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=".tmp-", suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True, default=str)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 class ResultStore:
     """Content-addressed persistent map ``spec.digest() -> DSE record``.
 
@@ -192,34 +210,19 @@ class ResultStore:
                "hardware_digest": hardware_digest, "spec": spec_dict,
                "record": record}
         os.makedirs(self._records, exist_ok=True)
-        self._atomic_write(self._record_path(digest), env)
+        # index marker first: a crash between the two steps then leaves a
+        # dangling marker (for_hardware skips it — get() misses), never a
+        # committed record the index can't enumerate; unconditional create
+        # also avoids the exists-then-open race between writers
         if hardware_digest is not None:
             hw_dir = os.path.join(self._by_hw, hardware_digest)
             os.makedirs(hw_dir, exist_ok=True)
-            marker = os.path.join(hw_dir, digest)
-            if not os.path.exists(marker):
-                with open(marker, "w"):
-                    pass
+            with open(os.path.join(hw_dir, digest), "w"):
+                pass
+        atomic_write_json(self._record_path(digest), env)
         with self._lock:
             self.writes += 1
         return digest
-
-    def _atomic_write(self, path: str, payload: Dict) -> None:
-        """Same-directory temp file + ``os.replace``: readers only ever
-        see absent or complete files, even across a writer crash."""
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   prefix=".tmp-", suffix=".json")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=2, sort_keys=True,
-                          default=str)
-            os.replace(tmp, path)
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
 
     # --------------------------------------------------------------- misc
     @staticmethod

@@ -32,7 +32,7 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Union
 
-from repro.core.dse import SweepExecutor, _as_spec
+from repro.core.dse import SweepExecutor
 from repro.core.spec import InterconnectSpec
 from repro.core.store import ResultStore
 
@@ -94,7 +94,12 @@ class DSEService:
         digests = [s.digest() for s in resolved]
         results: Dict[str, Dict] = {}
         waits: Dict[str, Future] = {}
-        claims: List[InterconnectSpec] = []
+        # claims carry (spec, digest, the Future *this query* installed):
+        # the digest is never recomputed on the hot path, and every
+        # release is identity-checked against that future — a claim slot
+        # a later query re-filled for the same digest is never popped or
+        # poisoned by this one
+        claims: List[tuple] = []
         # classification is O(1) per digest under the lock; store probes
         # (disk reads) happen outside it so concurrent queries don't
         # serialize on each other's I/O
@@ -108,53 +113,58 @@ class DSEService:
                     waits[digest] = fut
                     self.coalesced += 1
                 else:
-                    self._inflight[digest] = Future()
+                    fut = self._inflight[digest] = Future()
                     claimed.add(digest)
-                    claims.append(spec)
-        miss_specs: List[InterconnectSpec] = []
-        for spec in claims:
-            digest = spec.digest()
-            rec = self._probe_store(digest)
-            if rec is not None:
-                results[digest] = rec
-                with self._lock:
-                    self.hits += 1
-                    fut = self._inflight.pop(digest, None)
-                if fut is not None:
-                    fut.set_result(rec)
-            else:
-                miss_specs.append(spec)
-                with self._lock:
-                    self.misses += 1
+                    claims.append((spec, digest, fut))
+
+        def release(digest: str, fut: Future) -> None:
+            with self._lock:
+                if self._inflight.get(digest) is fut:
+                    del self._inflight[digest]
+
+        misses: List[tuple] = []
         failure: Optional[BaseException] = None
         try:
-            if miss_specs:
+            # the probe loop runs inside the same try/finally as the
+            # executor pass: a failure anywhere after claiming (a store
+            # probe raising, an interrupt) must still resolve every
+            # claimed in-flight future, or later queries for those
+            # digests would park on them forever
+            for spec, digest, fut in claims:
+                rec = self._probe_store(digest)
+                if rec is not None:
+                    results[digest] = rec
+                    with self._lock:
+                        self.hits += 1
+                    release(digest, fut)
+                    fut.set_result(rec)
+                else:
+                    misses.append((spec, digest, fut))
+                    with self._lock:
+                        self.misses += 1
+            if misses:
                 # one batched executor pass over the misses only: shared
                 # IR/resource caches, concurrent points, device emulation.
                 # record=False: the serving path must not grow the batch
                 # workflow's save_json accumulator without bound
                 recs = self.executor.run_points(
-                    [(s, {}) for s in miss_specs], record=False)
-                for spec, rec in zip(miss_specs, recs):
-                    d = spec.digest()
-                    results[d] = rec
-                    with self._lock:
-                        fut = self._inflight.pop(d, None)
-                    if fut is not None:
-                        fut.set_result(rec)
-                miss_specs = []
+                    [(s, {}) for s, _, _ in misses], record=False)
+                for (spec, digest, fut), rec in zip(misses, recs):
+                    results[digest] = rec
+                    release(digest, fut)
+                    fut.set_result(rec)
         except BaseException as e:
             failure = e
             raise
         finally:
-            # failure path: unblock coalesced waiters with the real
+            # failure path: unblock coalesced waiters on every digest
+            # this query claimed and did not resolve — with the real
             # exception instead of hanging them (or hiding the cause)
-            for spec in miss_specs:
-                with self._lock:
-                    fut = self._inflight.pop(spec.digest(), None)
-                if fut is not None and not fut.done():
+            for spec, digest, fut in claims:
+                if not fut.done():
+                    release(digest, fut)
                     fut.set_exception(failure or RuntimeError(
-                        f"computation for {spec.digest()} abandoned"))
+                        f"computation for {digest} abandoned"))
         for digest, fut in waits.items():
             results[digest] = fut.result()
         return [dict(results[d]) for d in digests]
@@ -162,7 +172,13 @@ class DSEService:
     def _probe_store(self, digest: str) -> Optional[Dict]:
         """Warm-path probe, delegating the record-usability predicate to
         the executor (one definition of "covers this workload" — app set
-        + emulation context — shared with ``run_point``'s lookup)."""
+        + emulation context — shared with ``run_point``'s lookup).
+
+        A cold digest is probed here *and* again by the executor's own
+        ``_store_lookup`` inside ``run_points`` — so ``store.stats()``
+        counts two misses per cold point (one extra disk read, noise
+        next to the PnR it precedes); the service/executor counters
+        each count one."""
         if self.store is None:
             return None
         rec = self.store.get(digest)
@@ -184,13 +200,23 @@ class DSEService:
     # ----------------------------------------------------------------- misc
     def warm(self, requests: Sequence[Request]) -> Dict[str, int]:
         """Cache-warming pass: compute-and-store every request, report
-        how much was already warm."""
-        before = self.hits
+        how much was already warm. The hit delta is snapshotted around
+        this call's query, so with *concurrent* queries in flight their
+        hits can land inside the window and inflate ``already_warm`` —
+        warm during quiet periods for exact numbers."""
+        with self._lock:
+            before = self.hits
         self.query(list(requests))
-        return {"requested": len(requests),
-                "already_warm": self.hits - before}
+        with self._lock:
+            delta = self.hits - before
+        return {"requested": len(requests), "already_warm": delta}
 
     def stats(self) -> Dict[str, Any]:
+        # the store scan (an os.listdir walk for the record count) runs
+        # outside the query lock: stats polling on a large store must
+        # not serialize the query path behind disk I/O
+        store_stats = (self.store.stats() if self.store is not None
+                       else None)
         with self._lock:
             q = max(self.queries, 1)
             return {
@@ -207,8 +233,7 @@ class DSEService:
                     "coalesced": self.executor.coalesced,
                     "pnr_computations": self.executor.pnr_computations,
                 },
-                "store": (self.store.stats() if self.store is not None
-                          else None),
+                "store": store_stats,
             }
 
     def close(self) -> None:

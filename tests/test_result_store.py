@@ -120,6 +120,21 @@ def test_store_hardware_index_enumerates_knob_variants(tmp_path):
     assert store.for_hardware(other.hardware_digest()) == []
 
 
+def test_store_dangling_index_marker_skipped(tmp_path):
+    """The index marker is written before the record (a crash between
+    the two leaves a dangling marker, never an unenumerable record);
+    for_hardware must skip markers whose record never landed."""
+    store = ResultStore(str(tmp_path / "s"))
+    spec = InterconnectSpec(**SMOKE)
+    store.put(spec, {"i": 0, "apps": {}})
+    hw = spec.hardware_digest()
+    dangling = os.path.join(store.root, "by_hardware", hw, "5" * 64)
+    with open(dangling, "w"):
+        pass
+    recs = store.for_hardware(hw)
+    assert [r["i"] for r in recs] == [0]
+
+
 # ---------------------------------------------------------------------------
 # Digest forward-compatibility (golden fixtures untouched)
 # ---------------------------------------------------------------------------
@@ -272,6 +287,119 @@ def test_concurrent_same_digest_coalesces(tmp_path):
     assert recs[0]["spec_digest"] == recs[1]["spec_digest"]
 
 
+def test_record_usable_accepts_deeper_emulation(tmp_path):
+    """A stored record emulated for >= the requested cycles is a hit
+    (the documented 'at least the requested emulation' contract); less
+    emulation — or none recorded — stays a miss."""
+    ex = _executor(ResultStore(str(tmp_path / "s")), emulate_cycles=6)
+    rec = {"apps": {"pw": {}}, "emulate_cycles": 10}
+    assert ex.record_usable(rec)
+    assert ex.record_usable(dict(rec, emulate_cycles=6))
+    assert not ex.record_usable(dict(rec, emulate_cycles=4))
+    assert not ex.record_usable(dict(rec, emulate_cycles=None))
+    ex0 = _executor(ResultStore(str(tmp_path / "s0")), emulate_cycles=0)
+    assert ex0.record_usable({"apps": {"pw": {}}})
+
+
+def test_store_deeper_emulation_serves_shallower_request(tmp_path):
+    """Executors alternating emulate_cycles against one store converge on
+    the deepest record instead of thrashing overwrites: a record emulated
+    for 8 cycles serves a 4-cycle request with zero recomputation."""
+    store = ResultStore(str(tmp_path / "s"))
+    spec = InterconnectSpec(**SMOKE)
+    ex8 = _executor(store, emulate_cycles=8)
+    ex8.run_point(spec)
+    assert ex8.pnr_computations == 1
+
+    ex4 = _executor(store, emulate_cycles=4)
+    rec = ex4.run_point(spec)
+    assert ex4.store_hits == 1 and ex4.pnr_computations == 0
+    assert rec["emulate_cycles"] == 8             # the stored, deeper run
+
+
+def test_concurrent_run_points_own_their_pending_futures(tmp_path):
+    """High-severity regression: with two run_points calls sharing one
+    executor, each run joins exactly its own deferred emulation futures.
+    Sweep B must return with its emulation merged while never popping
+    (and awaiting, or orphaning) sweep A's still-pending future."""
+    import itertools
+
+    counter = itertools.count(1)
+    count_lock = threading.Lock()
+    gate = threading.Event()
+    a_second_point = threading.Event()
+
+    def mk():
+        with count_lock:
+            n = next(counter)
+        if n == 2:                # sweep A's second point: park mid-run
+            a_second_point.set()
+            assert gate.wait(timeout=60)
+        return app_pointwise(1)
+
+    ex = _executor(ResultStore(str(tmp_path / "s")), apps={"pw": mk},
+                   max_workers=1)
+    assert ex.pipeline_emulation and ex.emulate_cycles > 0
+    a_points = [(InterconnectSpec(**SMOKE), {}),
+                (InterconnectSpec(**dict(SMOKE, num_tracks=4)), {})]
+    b_points = [(InterconnectSpec(**dict(SMOKE, num_tracks=3)), {})]
+    a_recs = []
+    a_thread = threading.Thread(
+        target=lambda: a_recs.extend(ex.run_points(a_points)))
+    a_thread.start()
+    try:
+        # A has dispatched point 1's emulation and is parked inside
+        # point 2's PnR; run sweep B to completion underneath it
+        assert a_second_point.wait(timeout=120)
+        b_recs = ex.run_points(b_points)
+        assert "emulation" in b_recs[0]["apps"]["pw"]  # B joined its own
+        assert a_thread.is_alive()                     # A still mid-run
+        # B's join-own must have left A's point-1 future on the global
+        # list (the old join-all popped it, handing A's future to B and
+        # letting a sibling return records with emulation in flight)
+        assert ex._pending
+    finally:
+        gate.set()
+        a_thread.join(timeout=300)
+    assert not a_thread.is_alive()
+    assert len(a_recs) == 2
+    for rec in a_recs:
+        assert "emulation" in rec["apps"]["pw"]
+    assert not ex._pending                             # A drained its own
+
+
+def test_same_digest_coalesces_through_emulation_tail(tmp_path):
+    """The in-flight entry survives until the deferred emulation (and
+    its store write-back) lands: a same-digest request arriving in that
+    tail coalesces onto the leader's record instead of missing the
+    still-unwritten store and redoing PnR + emulation."""
+    gate = threading.Event()
+    ex = _executor(ResultStore(str(tmp_path / "s")))
+    real = ex._emulate_batch
+
+    def parked(fab, routed, device=None, io_chunk=None):
+        out = real(fab, routed, device=device, io_chunk=io_chunk)
+        assert gate.wait(timeout=60)
+        return out
+
+    ex._emulate_batch = parked
+    spec = InterconnectSpec(**SMOKE)
+    rec = ex.run_point(spec, defer_emulation=True)
+    assert ex._inflight                           # alive through the tail
+    follower = threading.Thread(target=lambda: ex.run_point(spec))
+    follower.start()
+    time.sleep(0.2)                               # let it reach the wait
+    gate.set()
+    follower.join(timeout=120)
+    ex.join_pending()
+    assert ex.pnr_computations == 1               # follower never computed
+    # a late-scheduled follower may instead find the written-back store
+    # record; either way the tail never triggers a recompute
+    assert ex.coalesced + ex.store_hits == 1
+    assert "emulation" in rec["apps"]["pw"]
+    assert not ex._inflight and not ex._pending
+
+
 def test_save_json_dedupes_repeated_sweeps(tmp_path):
     """Satellite fix: repeated sweep_* calls on one executor used to
     accumulate and re-persist overlapping records."""
@@ -393,6 +521,32 @@ def test_service_concurrent_queries_coalesce(tmp_path):
     # the second query either coalesced on the in-flight future or (if it
     # lost the race entirely) was served from the store
     assert st["coalesced"] + st["hits"] == 1
+    svc.close()
+
+
+def test_service_probe_failure_resolves_claimed_futures(tmp_path):
+    """A store probe raising mid-query must not leak claimed in-flight
+    futures (later queries for those digests would hang on them); the
+    query surfaces the error and the service recovers."""
+    root = str(tmp_path / "s")
+    apps = {"pw": lambda: app_pointwise(1)}
+    spec = InterconnectSpec(**SMOKE)
+    specs = [spec, spec.replace(num_tracks=3)]
+    warm = canal.serve(store=root, apps=apps, emulate_cycles=0,
+                       use_pallas=False, max_workers=1)
+    warm.query(spec)                              # a record to probe
+    warm.close()
+
+    svc = canal.serve(store=root, apps=apps, emulate_cycles=0,
+                      use_pallas=False, max_workers=1)
+    svc.executor.record_usable = \
+        lambda rec: (_ for _ in ()).throw(TypeError("malformed record"))
+    with pytest.raises(TypeError, match="malformed record"):
+        svc.query(specs)
+    assert not svc._inflight                      # nothing leaked
+    del svc.executor.record_usable                # fault clears
+    recs = svc.query(specs)
+    assert all(r["apps"]["pw"]["success"] for r in recs)
     svc.close()
 
 
