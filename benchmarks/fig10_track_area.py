@@ -20,8 +20,9 @@ def run(quick: bool = False):
     _, us = timed(build)
     lines = []
     for r in recs:
-        lines.append(emit(f"fig10/tracks={r['num_tracks']}", us / len(recs),
-                          f"sb={r['sb_area']:.0f}um2 cb={r['cb_area']:.0f}um2"))
+        lines.append(emit(
+            f"fig10/tracks={r['num_tracks']}", us / len(recs),
+            f"sb={r['sb_area']:.0f}um2 cb={r['cb_area']:.0f}um2"))
     save_json("fig10_track_area", recs)
     sb = [r["sb_area"] for r in recs]
     cb = [r["cb_area"] for r in recs]

@@ -8,7 +8,6 @@ injected mid-run failure, and straggler monitoring.
 import argparse
 import tempfile
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp

@@ -21,13 +21,23 @@ pipeline via :class:`PassManager`. Sweeps are declarative grids:
 ``spec_grid(base, {"num_tracks": (2, 4, 6)})`` feeds
 :class:`SweepExecutor.run_points`.
 
+Compiles run the static analyzer by default
+(``compile(spec, analyze="error"|"warn"|"off")``, report on
+``fab.diagnostics``); ``canal.analyze(ic_or_fabric)`` runs it directly
+and ``python -m canal.lint`` is the CLI over spec files and importable
+configs.
+
 Everything here re-exports from :mod:`repro.core`; the legacy
 ``repro.core.edsl.create_uniform_interconnect`` entry point still works
 as a deprecation shim over the same pipeline.
 """
-from repro.core.compile import CompiledFabric, compile_spec as compile  # noqa: F401,A001
-from repro.core.passes import (DEFAULT_PASSES, IRPass, PassContext,  # noqa: F401
-                               PassManager, ir_digest)
+from repro.core.analysis import (AnalysisError, AnalysisPass,  # noqa: F401
+                                 AnalysisReport, Diagnostic, Severity,
+                                 analyze, register_rule, rule_table)
+from repro.core.compile import (CompiledFabric,  # noqa: F401
+                                compile_spec as compile)  # noqa: A001
+from repro.core.passes import (DEFAULT_PASSES, IRPass,  # noqa: F401
+                               PassContext, PassManager, ir_digest)
 from repro.core.spec import (InterconnectSpec, SwitchBoxType,  # noqa: F401
                              sides_for, spec_from_kwargs, spec_grid)
 from repro.core.store import ResultStore  # noqa: F401
@@ -49,7 +59,9 @@ def serve(store=None, **kwargs):
 
 
 __all__ = [
-    "CompiledFabric", "compile", "DEFAULT_PASSES", "IRPass", "PassContext",
+    "AnalysisError", "AnalysisPass", "AnalysisReport", "CompiledFabric",
+    "Diagnostic", "Severity", "analyze", "register_rule", "rule_table",
+    "compile", "DEFAULT_PASSES", "IRPass", "PassContext",
     "PassManager", "ir_digest", "InterconnectSpec", "SwitchBoxType",
     "sides_for", "spec_from_kwargs", "spec_grid", "ResultStore", "serve",
 ]

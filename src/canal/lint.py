@@ -1,0 +1,10 @@
+"""``python -m canal.lint`` — static analysis CLI over design points.
+
+Thin entry point; the implementation lives in
+:mod:`repro.core.analysis.lint`. See that module (or ``--help``) for
+targets, output formats and the CI exit-code contract.
+"""
+from repro.core.analysis.lint import build_parser, run  # noqa: F401
+
+if __name__ == "__main__":
+    raise SystemExit(run())

@@ -1,0 +1,27 @@
+"""``canal.analyze`` — rule-based static analysis over the interconnect IR.
+
+Public surface:
+
+* :func:`analyze` — run registered rules over an ``Interconnect``,
+  returning an :class:`AnalysisReport` of :class:`Diagnostic` findings;
+* :func:`register_rule` / :data:`RULES` / :func:`rule_table` — the
+  ``AnalysisPass`` registry (the read-only twin of ``DEFAULT_PASSES``);
+* ``Severity`` / ``AnalysisError`` — the gating model used by
+  ``canal.compile(analyze=...)`` and the DSE pre-screen.
+
+Importing the package registers the built-in rules (``rules`` — the
+seven IR rules of ISSUE 6) and the post-lowering verification rules
+(``lowered`` — the §3.3 checks folded in from ``repro.core.verify``).
+"""
+from .diagnostics import (AnalysisError, AnalysisReport, Diagnostic,
+                          Severity)
+from .framework import (RULES, AnalysisContext, AnalysisPass, analyze,
+                        register_rule, rule_table)
+from . import rules as _builtin_rules  # noqa: F401  (registration import)
+from . import lowered as _lowered_rules  # noqa: F401
+
+__all__ = [
+    "AnalysisContext", "AnalysisError", "AnalysisPass", "AnalysisReport",
+    "Diagnostic", "RULES", "Severity", "analyze", "register_rule",
+    "rule_table",
+]

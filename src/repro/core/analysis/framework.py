@@ -1,0 +1,236 @@
+"""The analysis-pass framework: ``IRPass``/``PassManager``'s read-only twin.
+
+An :class:`AnalysisPass` is a named, registered *rule*: a pure function
+``(AnalysisContext) -> Iterable[Diagnostic]`` over the frozen IR. Rules
+never mutate the graph — they observe it and report. The registry mirrors
+the compiler-pass registry so tooling can enumerate, subset and document
+rules the same way it does passes; :func:`analyze` is the single driver
+(``canal.analyze``), used by the compile front door, the DSE pre-screen
+and the ``python -m canal.lint`` CLI.
+
+The :class:`AnalysisContext` carries memoized whole-graph facts —
+source/sink sets, forward/backward reachability, array-boundary
+exemptions — so rules that share them (``dead-mux``,
+``unreachable-node``, ``static-routability``) pay for one traversal, not
+three.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+
+from ..graph import IO, Interconnect, InterconnectGraph, Node, SwitchBoxNode
+from ..spec import InterconnectSpec
+from .diagnostics import AnalysisReport, Diagnostic, Severity
+
+RuleFn = Callable[["AnalysisContext"], Iterable[Diagnostic]]
+
+
+@dataclass
+class AnalysisContext:
+    """Read-only state threaded through the rules: the IR, the spec when
+    known (hand-built IR legitimately has none — spec-dependent rules
+    gate themselves off), and memoized graph facts."""
+
+    ic: Interconnect
+    spec: Optional[InterconnectSpec] = None
+    #: lowered FabricModule when the caller has one — enables the
+    #: scope="lowered" rules (structural equivalence, config sweep)
+    fabric: Optional[object] = None
+    _sources: Dict[int, Set[Node]] = field(default_factory=dict)
+    _sinks: Dict[int, Set[Node]] = field(default_factory=dict)
+    _fwd: Dict[int, Set[Node]] = field(default_factory=dict)
+    _bwd: Dict[int, Set[Node]] = field(default_factory=dict)
+
+    def graphs(self) -> List[InterconnectGraph]:
+        return [self.ic.graphs[w] for w in self.ic.widths]
+
+    # ----------------------------------------------------------- boundary
+    @staticmethod
+    def faces_off_array(g: InterconnectGraph, node: Node) -> bool:
+        """True for switch-box nodes on a side with no neighbouring tile:
+        the array's external interface (chip IO in a real CGRA). They
+        legitimately have no on-array driver (SB_IN) or consumer
+        (SB_OUT), so reachability rules treat them as sources/sinks
+        rather than defects."""
+        if not isinstance(node, SwitchBoxNode):
+            return False
+        dx, dy = node.side.delta()
+        return g.get_tile(node.x + dx, node.y + dy) is None
+
+    # -------------------------------------------------------- sources/sinks
+    def sources(self, g: InterconnectGraph) -> Set[Node]:
+        """Nodes that inject data into the routing graph: core *output*
+        ports of this layer's width and array-boundary SB inputs.
+        Registers are deliberately NOT sources — a register chain fed by
+        nothing only ever replays reset values; reachability traverses
+        *through* registers instead."""
+        key = id(g)
+        out = self._sources.get(key)
+        if out is None:
+            out = set()
+            for tile in g.tiles.values():
+                if tile.core is not None:
+                    for p in tile.core.outputs():
+                        if p.width == g.width:
+                            out.add(tile.ports[p.name])
+            for n in g.nodes():
+                if (isinstance(n, SwitchBoxNode) and n.io == IO.SB_IN
+                        and self.faces_off_array(g, n)):
+                    out.add(n)
+            self._sources[key] = out
+        return out
+
+    def sinks(self, g: InterconnectGraph) -> Set[Node]:
+        """Nodes whose value is externally observable: core *input*
+        ports of this layer's width and array-boundary SB outputs.
+        Registers are deliberately NOT sinks — a register nobody reads
+        is dead state; reachability traverses *through* registers
+        instead."""
+        key = id(g)
+        out = self._sinks.get(key)
+        if out is None:
+            out = set()
+            for tile in g.tiles.values():
+                if tile.core is not None:
+                    for p in tile.core.inputs():
+                        if p.width == g.width:
+                            out.add(tile.ports[p.name])
+            for n in g.nodes():
+                if (isinstance(n, SwitchBoxNode) and n.io == IO.SB_OUT
+                        and self.faces_off_array(g, n)):
+                    out.add(n)
+            self._sinks[key] = out
+        return out
+
+    # --------------------------------------------------------- reachability
+    def reachable_forward(self, g: InterconnectGraph) -> Set[Node]:
+        """Nodes reachable from any source along fan-out edges."""
+        key = id(g)
+        out = self._fwd.get(key)
+        if out is None:
+            out = self._bfs(self.sources(g), lambda n: n.fan_out)
+            self._fwd[key] = out
+        return out
+
+    def reaches_sink(self, g: InterconnectGraph) -> Set[Node]:
+        """Nodes from which some sink is reachable (backward BFS)."""
+        key = id(g)
+        out = self._bwd.get(key)
+        if out is None:
+            out = self._bfs(self.sinks(g), lambda n: n.fan_in)
+            self._bwd[key] = out
+        return out
+
+    @staticmethod
+    def _bfs(seeds: Set[Node],
+             nbrs: Callable[[Node], Sequence[Node]]) -> Set[Node]:
+        seen = set(seeds)
+        frontier = list(seeds)
+        while frontier:
+            n = frontier.pop()
+            for m in nbrs(n):
+                if m not in seen:
+                    seen.add(m)
+                    frontier.append(m)
+        return seen
+
+
+@dataclass(frozen=True)
+class AnalysisPass:
+    """A registered rule. ``name`` is the stable diagnostic id;
+    ``when`` gates spec- or mode-dependent rules (e.g. ``rv-handshake``
+    only applies to ready-valid designs); ``scope`` separates cheap IR
+    rules (``"ir"``, run by default everywhere) from post-lowering
+    verification (``"lowered"``: structural equivalence and the config
+    sweep, which need a compiled :class:`FabricModule` and device time —
+    reachable via ``CompiledFabric.verify()`` and ``canal.lint
+    --lowered``)."""
+
+    name: str
+    run: RuleFn
+    description: str = ""
+    scope: str = "ir"
+    when: Callable[[AnalysisContext], bool] = lambda ctx: True
+
+
+#: the rule registry, in registration order (report order follows it)
+RULES: Dict[str, AnalysisPass] = {}
+
+
+def register_rule(name: str, description: str = "", scope: str = "ir",
+                  when: Callable[[AnalysisContext], bool] = lambda ctx: True
+                  ) -> Callable[[RuleFn], RuleFn]:
+    """Decorator registering a rule function under a stable id — the
+    analysis mirror of adding an :class:`IRPass` to ``DEFAULT_PASSES``.
+    Re-registering an id replaces the rule (supports reload/monkeypatch
+    in tests) but third-party ids must not collide with built-ins."""
+
+    def deco(fn: RuleFn) -> RuleFn:
+        RULES[name] = AnalysisPass(name=name, run=fn,
+                                   description=description, scope=scope,
+                                   when=when)
+        return fn
+    return deco
+
+
+def rule_table(scope: Optional[str] = None) -> List[AnalysisPass]:
+    """Registered rules (optionally one scope), registration-ordered."""
+    return [r for r in RULES.values()
+            if scope is None or r.scope == scope]
+
+
+def _resolve_spec(ic: Interconnect,
+                  spec: Optional[InterconnectSpec]) -> Optional[
+                      InterconnectSpec]:
+    if spec is not None:
+        return spec
+    return getattr(ic, "spec", None)
+
+
+def analyze(ic: Interconnect,
+            spec: Optional[InterconnectSpec] = None,
+            rules: Optional[Sequence[str]] = None,
+            scope: str = "ir",
+            severities: Optional[Dict[str, "str | Severity"]] = None,
+            fail_on: Optional["str | Severity"] = None,
+            fabric: Optional[object] = None) -> AnalysisReport:
+    """Run the registered analysis rules over an interconnect IR.
+
+    ``spec`` enables spec-dependent rules when the IR was not produced
+    by the pass pipeline (pipeline IR carries its spec already);
+    ``rules`` selects a subset by id (unknown ids raise — a misspelled
+    CI config must fail loudly, not silently skip the check);
+    ``severities`` remaps per-rule severity (project policy, e.g. demote
+    ``dead-mux`` to info); ``fail_on`` raises :class:`AnalysisError`
+    when any finding reaches that severity. This is the one driver
+    behind ``canal.compile(analyze=...)``, the DSE pre-screen and the
+    lint CLI.
+    """
+    if not isinstance(ic, Interconnect) and hasattr(ic, "interconnect"):
+        spec = spec if spec is not None else getattr(ic, "spec", None)
+        ic = ic.interconnect                     # a CompiledFabric
+    ctx = AnalysisContext(ic=ic, spec=_resolve_spec(ic, spec),
+                          fabric=fabric)
+    if rules is None:
+        selected = rule_table(None if scope == "all" else scope)
+    else:
+        unknown = sorted(set(rules) - set(RULES))
+        if unknown:
+            raise ValueError(f"unknown analysis rules {unknown}; "
+                             f"registered: {sorted(RULES)}")
+        selected = [RULES[r] for r in rules]
+    overrides = {k: Severity.from_str(v)
+                 for k, v in (severities or {}).items()}
+    report = AnalysisReport(rules_run=tuple(r.name for r in selected))
+    for r in selected:
+        if not r.when(ctx):
+            continue
+        found = list(r.run(ctx))
+        sev = overrides.get(r.name)
+        if sev is not None:
+            found = [replace(d, severity=sev) for d in found]
+        report.extend(found)
+    if fail_on is not None:
+        report.raise_if(fail_on)
+    return report

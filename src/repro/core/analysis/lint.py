@@ -1,0 +1,222 @@
+"""``python -m canal.lint`` — the static analyzer as a CI-friendly CLI.
+
+Lints interconnect design points — spec JSON files and/or importable
+Python design points — through the same :func:`repro.core.analysis.analyze`
+driver the compile front door and the DSE pre-screen use.
+
+Targets:
+
+* positional arguments: paths to ``InterconnectSpec`` JSON files
+  (``spec.to_json()`` output);
+* ``--config module:attr``: an importable design point — an
+  ``InterconnectSpec``, a ``CompiledFabric``, an ``Interconnect``, a
+  spec dict, or a zero-argument callable returning any of those
+  (e.g. ``--config repro.configs.cgra_amber:smoke``).
+
+Output: lint-style text (default) or ``--format json`` (one document
+covering all targets, the CI artifact shape); ``--output`` writes the
+report to a file *in addition to* the terminal summary.
+
+Exit codes (CI contract): ``0`` every target clean at the ``--fail-on``
+severity (default ``error``); ``1`` at least one finding reached it;
+``2`` usage or load error (unreadable file, unknown rule id, bad
+import) — distinct from ``1`` so a misconfigured CI job cannot pass as
+"findings found" or vice versa.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import sys
+from typing import List, Optional, Tuple
+
+from .diagnostics import Severity
+from .framework import RULES, analyze, rule_table
+
+USAGE_ERROR = 2
+
+
+class LintError(Exception):
+    """A target could not be loaded/analyzed (exit code 2)."""
+
+
+def _load_config(ref: str):
+    """Resolve ``module:attr`` (or ``module.attr``) to a design point."""
+    mod_name, sep, attr = ref.partition(":")
+    if not sep:
+        mod_name, _, attr = ref.rpartition(".")
+        if not mod_name:
+            raise LintError(f"--config {ref!r}: expected module:attr")
+    try:
+        mod = importlib.import_module(mod_name)
+    except ImportError as e:
+        raise LintError(f"--config {ref!r}: cannot import "
+                        f"{mod_name!r}: {e}") from e
+    try:
+        obj = getattr(mod, attr)
+    except AttributeError:
+        raise LintError(
+            f"--config {ref!r}: module {mod_name!r} has no "
+            f"attribute {attr!r}") from None
+    if callable(obj) and not hasattr(obj, "graphs") \
+            and not hasattr(obj, "interconnect"):
+        obj = obj()
+    return obj
+
+
+def _to_point(obj, origin: str) -> Tuple[object, Optional[object]]:
+    """Normalize a loaded design point to ``(ic, spec)``."""
+    from ..graph import Interconnect
+    from ..spec import InterconnectSpec
+
+    if isinstance(obj, dict):
+        obj = InterconnectSpec.from_dict(obj)
+    if isinstance(obj, InterconnectSpec):
+        from ..passes import PassManager
+        return PassManager().run(obj), obj
+    if hasattr(obj, "interconnect") and hasattr(obj, "spec"):
+        return obj.interconnect, obj.spec         # CompiledFabric
+    if isinstance(obj, Interconnect):
+        return obj, getattr(obj, "spec", None)
+    raise LintError(
+        f"{origin}: cannot lint a {type(obj).__name__} — expected an "
+        "InterconnectSpec, spec dict, Interconnect or CompiledFabric")
+
+
+def _load_spec_file(path: str):
+    from ..spec import InterconnectSpec
+    try:
+        with open(path) as fh:
+            text = fh.read()
+    except OSError as e:
+        raise LintError(f"{path}: {e}") from e
+    try:
+        return InterconnectSpec.from_json(text)
+    except (ValueError, TypeError, KeyError) as e:
+        raise LintError(f"{path}: not a spec JSON: {e}") from e
+
+
+def _list_rules() -> str:
+    lines = []
+    for r in rule_table():
+        lines.append(f"{r.name:26s} [{r.scope}] {r.description}")
+    return "\n".join(lines)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m canal.lint",
+        description="Static analysis over interconnect design points.")
+    ap.add_argument("specs", nargs="*", metavar="SPEC.json",
+                    help="InterconnectSpec JSON files to lint")
+    ap.add_argument("--config", action="append", default=[],
+                    metavar="MODULE:ATTR",
+                    help="importable design point (spec, CompiledFabric, "
+                         "Interconnect, or zero-arg factory); repeatable")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all IR rules)")
+    ap.add_argument("--fail-on", default="error",
+                    choices=["info", "warn", "warning", "error"],
+                    help="severity that sets exit code 1 (default: error)")
+    ap.add_argument("--format", default="text",
+                    choices=["text", "json"], help="report format")
+    ap.add_argument("--output", "-o", default=None, metavar="FILE",
+                    help="also write the report (always JSON) to FILE")
+    ap.add_argument("--lowered", action="store_true",
+                    help="additionally run the post-lowering verification "
+                         "rules (compiles the fabric; costs device time)")
+    ap.add_argument("--per-pass", action="store_true", dest="per_pass",
+                    help="attribute each finding to the pipeline pass "
+                         "that introduced it (spec targets only; slower)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    return ap
+
+
+def run(argv: Optional[List[str]] = None,
+        out=None) -> int:
+    out = out or sys.stdout
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        print(_list_rules(), file=out)
+        return 0
+    if not args.specs and not args.config:
+        print("error: no targets (pass SPEC.json files and/or --config "
+              "module:attr; see --help)", file=sys.stderr)
+        return USAGE_ERROR
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+    fail_on = Severity.from_str(
+        {"warn": "warning"}.get(args.fail_on, args.fail_on))
+
+    targets: List[Tuple[str, object]] = []
+    results = []
+    worst_clean = True
+    try:
+        for path in args.specs:
+            targets.append((path, _load_spec_file(path)))
+        for ref in args.config:
+            targets.append((ref, _load_config(ref)))
+        if rules is not None:
+            unknown = sorted(set(rules) - set(RULES))
+            if unknown:
+                raise LintError(f"unknown rule id(s) {unknown}; "
+                                f"see --list-rules")
+        for origin, obj in targets:
+            report = _lint_one(obj, origin, rules, args)
+            clean = report.ok(fail_on)
+            worst_clean = worst_clean and clean
+            results.append((origin, report, clean))
+    except LintError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return USAGE_ERROR
+
+    doc = {"fail_on": fail_on.name.lower(),
+           "clean": worst_clean,
+           "targets": {origin: rep.to_dict()
+                       for origin, rep, _ in results}}
+    if args.format == "json":
+        print(json.dumps(doc, indent=2, sort_keys=True), file=out)
+    else:
+        for origin, rep, clean in results:
+            verdict = "clean" if clean else "FAILED"
+            print(f"== {origin}: {verdict} ==", file=out)
+            print(rep.render(), file=out)
+    if args.output:
+        with open(args.output, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return 0 if worst_clean else 1
+
+
+def _lint_one(obj, origin: str, rules, args):
+    from ..spec import InterconnectSpec
+
+    if isinstance(obj, dict):
+        obj = InterconnectSpec.from_dict(obj)
+    if args.per_pass and isinstance(obj, InterconnectSpec):
+        from ..passes import PassManager
+        from ..passes import PassContext, _default_core_fn
+        pm = PassManager()
+        ctx = PassContext(spec=obj, core_fn=_default_core_fn(obj))
+        pm.run(obj, core_fn=ctx.core_fn, ctx=ctx, analyze_per_pass=True)
+        report = ctx.analysis_report
+        ic, spec = ctx.ic, obj
+    else:
+        ic, spec = _to_point(obj, origin)
+        report = analyze(ic, spec=spec, rules=rules)
+    if rules is not None and args.per_pass:
+        report.diagnostics = [d for d in report.diagnostics
+                              if d.rule in set(rules)]
+    if args.lowered:
+        if spec is not None and getattr(spec, "ready_valid", False):
+            pass  # lowered verification covers the static interconnect
+        else:
+            from ..lowering import FabricModule
+            lowered = analyze(ic, spec=spec, scope="lowered",
+                              fabric=FabricModule(ic))
+            report.extend(lowered.diagnostics)
+            report.rules_run = tuple(report.rules_run) + tuple(
+                lowered.rules_run)
+    return report

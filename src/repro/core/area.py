@@ -17,10 +17,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Iterable, Optional, Tuple
+from typing import Dict, Iterable, Optional
 
-from .graph import (IO, Interconnect, InterconnectGraph, Node, NodeKind,
-                    Side)
+from .graph import Interconnect, InterconnectGraph, Node, NodeKind
 
 
 @dataclass(frozen=True)
@@ -30,9 +29,9 @@ class AreaConstants:
     mux2_per_bit: float = 0.6       # 2:1 mux slice
     config_bit: float = 1.2         # config store flop + scan
     ff_per_bit: float = 1.0         # pipeline register flop
-    rv_join_per_input: float = 0.4  # Fig. 5 one-hot AOI ready-join, per mux input
+    rv_join_per_input: float = 0.4  # Fig. 5 one-hot AOI join, per input
     rv_join_lut_per_input: float = 3.2   # naive LUT join (rejected design)
-    fifo_ctrl_full: float = 15.35   # depth-2 FIFO controller (registered ready)
+    fifo_ctrl_full: float = 15.35   # depth-2 FIFO ctrl (registered ready)
     fifo_ctrl_split: float = 16.2   # split-FIFO controller (chained handshake)
     valid_wire_bit: float = 0.0     # valid net is routed with data muxes
 

@@ -16,7 +16,7 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 from .graph import Node
-from .lowering import FabricModule, PE_OP_IDS
+from .lowering import FabricModule
 
 
 @dataclass(frozen=True)

@@ -30,7 +30,8 @@ class CompiledFabric:
 
     def __init__(self, spec: InterconnectSpec, ic: Interconnect,
                  pass_log: Optional[List[Dict]] = None,
-                 use_pallas: bool = False, cacheable: bool = True):
+                 use_pallas: bool = False, cacheable: bool = True,
+                 diagnostics=None):
         self.spec = spec
         self._ic = ic
         self.pass_log = list(pass_log or [])
@@ -39,6 +40,9 @@ class CompiledFabric:
         #: the spec digest then under-describes the design, so
         #: digest-keyed caches must not admit this fabric
         self.cacheable = cacheable
+        #: the static-analysis AnalysisReport produced at compile time
+        #: (None when compiled with analyze="off" or constructed raw)
+        self.diagnostics = diagnostics
         self._fabrics: Dict[Tuple[bool, bool], object] = {}
         self._resources: Dict[float, object] = {}
         self._codec = None
@@ -95,6 +99,36 @@ class CompiledFabric:
             res = RoutingResources(self._ic, reg_penalty=reg_penalty)
             self._resources[key] = res
         return res
+
+    # ------------------------------------------------------------- analysis
+    def analyze(self, rules: Optional[Sequence[str]] = None,
+                fail_on: Optional[str] = None):
+        """(Re-)run the IR-scope static analyzer on this design point and
+        return the :class:`AnalysisReport` — for subsets or severities
+        beyond what the compile-time ``analyze=`` knob recorded in
+        :attr:`diagnostics`."""
+        from .analysis import analyze as run_rules
+        return run_rules(self._ic, spec=self.spec, rules=rules,
+                         fail_on=fail_on)
+
+    def verify(self, rules: Optional[Sequence[str]] = None,
+               fail_on: Optional[str] = "error",
+               use_pallas: Optional[bool] = None):
+        """Run the post-lowering verification analyses (the paper's §3.3
+        checks, registered as ``scope="lowered"`` rules:
+        ``structural-equivalence`` and the exhaustive ``config-sweep``)
+        against this fabric's lowered module. Costs device time —
+        deliberately not part of compile-time analysis. Raises
+        :class:`AnalysisError` at ``fail_on`` severity (pass ``None`` to
+        only report); returns the :class:`AnalysisReport`."""
+        from .analysis import analyze as run_rules
+        if self.spec.ready_valid:
+            raise NotImplementedError(
+                "lowered verification covers the static interconnect; "
+                "the ready-valid fabric has its own emulation tests")
+        return run_rules(self._ic, spec=self.spec, rules=rules,
+                         scope="lowered", fabric=self.fabric(use_pallas),
+                         fail_on=fail_on)
 
     # ------------------------------------------------------------------ PnR
     def place_and_route(self, app,
@@ -189,11 +223,19 @@ class CompiledFabric:
 
 def compile_spec(spec: InterconnectSpec, core_fn=None,
                  use_pallas: bool = False,
-                 passes=None) -> CompiledFabric:
+                 passes=None,
+                 analyze: str = "warn",
+                 analyze_per_pass: bool = False) -> CompiledFabric:
     """The single front door (``canal.compile``): compile a declarative
     :class:`InterconnectSpec` through the pass pipeline into a
     :class:`CompiledFabric`. ``passes`` overrides the default pipeline
-    (a sequence of :class:`repro.core.passes.IRPass`)."""
+    (a sequence of :class:`repro.core.passes.IRPass`); ``analyze``
+    gates the static analyzer (``"error"`` raises on error-severity
+    findings, ``"warn"`` — the default — records the report on
+    ``CompiledFabric.diagnostics``, ``"off"`` skips it) and
+    ``analyze_per_pass`` attributes each finding to the pipeline pass
+    that introduced it."""
     from .passes import DEFAULT_PASSES, PassManager
     pm = PassManager(DEFAULT_PASSES if passes is None else passes)
-    return pm.compile(spec, core_fn=core_fn, use_pallas=use_pallas)
+    return pm.compile(spec, core_fn=core_fn, use_pallas=use_pallas,
+                      analyze=analyze, analyze_per_pass=analyze_per_pass)

@@ -137,6 +137,11 @@ class SweepExecutor:
         self.store_misses = 0    # store consulted, nothing usable
         self.coalesced = 0       # requests piggybacked on an in-flight one
         self.pnr_computations = 0  # design points actually placed+routed
+        #: design points rejected by the static pre-screen (PnR skipped);
+        #: one per *computed* rejection — store hits on a rejected record
+        #: count as store_hits, not here
+        self.analysis_rejections = 0
+        self._analysis_cache: Dict[Tuple, Any] = {}
 
     @staticmethod
     def _folded_knob(name: str, value):
@@ -204,6 +209,25 @@ class SweepExecutor:
             with self._lock:
                 ic = self._ic_cache.setdefault(key, ic)
         return ic
+
+    def analysis_report(self, spec, ic=None):
+        """Static-analysis report for a design point, cached per
+        hardware digest (analysis reads only the hardware IR, so every
+        execution-knob variant shares one verdict). This is the DSE
+        pre-screen: ``_compute_point`` consults it before spending a PnR
+        run on a statically-invalid fabric."""
+        from .analysis import analyze
+        spec = _as_spec(spec)
+        key = self._key(spec)
+        with self._lock:
+            report = self._analysis_cache.get(key)
+        if report is None:
+            if ic is None:
+                ic = self.interconnect(spec)
+            report = analyze(ic, spec=spec.hardware_spec())
+            with self._lock:
+                report = self._analysis_cache.setdefault(key, report)
+        return report
 
     def resources(self, ic, key: Tuple,
                   reg_penalty: Optional[float] = None):
@@ -541,10 +565,37 @@ class SweepExecutor:
         or there was nothing to emulate) so coalesced followers can wait
         on it too."""
         t0 = time.perf_counter()
-        with self._lock:
-            self.pnr_computations += 1
         ic = self.interconnect(spec)
         key = self._key(spec)
+        # static pre-screen: a fabric the analyzer rejects gets a record
+        # (the verdict persists — re-sweeps hit the store, not PnR) but
+        # no PnR/emulation minutes. Free pruning for machine-generated
+        # spec streams, where malformed points are routine.
+        report = self.analysis_report(spec, ic)
+        analysis = report.to_dict(max_diagnostics=16)
+        if not report.ok():
+            with self._lock:
+                self.analysis_rejections += 1
+            msg = ("static analysis rejected the fabric: "
+                   + ", ".join(sorted({d.rule for d in report.errors})))
+            out = {name: {"success": False,
+                          "skipped": "static-analysis",
+                          "critical_path_ns": float("inf"),
+                          "wirelength": 0, "route_iterations": 0,
+                          "seconds": 0.0, "error": msg,
+                          "route_strategy": None}
+                   for name in self.apps}
+            rec = {"spec_digest": digest,
+                   "hardware_digest": spec.hardware_digest(),
+                   "apps": out, "analysis": analysis,
+                   "sb_area": switch_box_area(ic),
+                   "cb_area": connection_box_area(ic),
+                   "emulate_cycles": self.emulate_cycles,
+                   "gen_pnr_seconds": time.perf_counter() - t0}
+            self._store_put(spec, rec)
+            return rec, None
+        with self._lock:
+            self.pnr_computations += 1
         res = self.resources(ic, key, reg_penalty=spec.reg_penalty)
         out: Dict[str, Dict] = {}
         routed: List[Tuple[str, Any, Any]] = []
@@ -572,6 +623,7 @@ class SweepExecutor:
         rec: Dict = {"spec_digest": digest,
                      "hardware_digest": spec.hardware_digest(),
                      "apps": out,
+                     "analysis": analysis,
                      "sb_area": switch_box_area(ic),
                      "cb_area": connection_box_area(ic),
                      "emulate_cycles": self.emulate_cycles}

@@ -21,8 +21,7 @@ import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
 from .graph import IO, Interconnect, Node, SBConnection, Side, SwitchBoxNode
-from .spec import (SIDE_REDUCTION_ORDER, InterconnectSpec,  # noqa: F401
-                   SwitchBoxType, sides_for)
+from .spec import InterconnectSpec, SwitchBoxType
 from .tiles import Core
 
 

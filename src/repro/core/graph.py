@@ -1,4 +1,5 @@
-"""Graph-based intermediate representation for CGRA interconnects (Canal §3.1).
+"""Graph-based intermediate representation for CGRA interconnects
+(Canal §3.1).
 
 The IR primitives are *nodes* — anything that can be connected in the
 underlying hardware — and directed *edges* — wires connecting nodes. A node
@@ -13,8 +14,8 @@ functional fabric lives in ``repro.core.lowering``.
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 
 class Side(enum.IntEnum):
@@ -349,17 +350,25 @@ class InterconnectGraph:
         self.reg_muxes.append(mux)
 
     def prune(self, nodes: Iterable[Node]) -> None:
-        """Remove fully isolated nodes (no fan-in, no fan-out) from the
-        graph's node set. A connected node cannot be pruned: removal
-        would renumber surviving mux inputs and silently change config
-        semantics."""
+        """Remove observer-free nodes (no fan-out) from the graph's node
+        set, detaching their incoming edges. A node with fan-out cannot
+        be pruned: removing it would shrink its consumers' fan-in lists,
+        renumbering surviving mux inputs and silently changing config
+        semantics. Detaching *incoming* edges is safe — it only shrinks
+        the drivers' fan-out lists, which carry no select-bit meaning
+        (and may expose those drivers as newly observer-free: callers
+        such as ``prune_dead_muxes`` iterate to a fixpoint)."""
         nodes = list(nodes)       # a generator must not drain on validation
         for n in nodes:
-            if n.fan_in or n.fan_out:
-                raise ValueError(f"cannot prune connected node {n}")
+            if n.fan_out:
+                raise ValueError(
+                    f"cannot prune node still connected downstream: {n}")
         dead = set(nodes)
         if not dead:
             return
+        for n in dead:
+            for src in list(n.fan_in):
+                src.remove_edge(n)
         self.registers = [r for r in self.registers if r not in dead]
         self.reg_muxes = [m for m in self.reg_muxes if m not in dead]
         self._pruned.update(dead)

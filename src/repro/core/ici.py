@@ -15,9 +15,8 @@ boxes (axis order, torus vs mesh, per-axis ring schedules).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 

@@ -22,7 +22,7 @@ across devices (``run_batch``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -34,7 +34,7 @@ from jax.sharding import Mesh, PartitionSpec
 
 from repro.kernels.fabric_step import PE_OPS, pe_alu_candidates
 
-from .graph import (IO, Interconnect, Node, NodeKind, PortNode, Side)
+from .graph import IO, Interconnect, Node, NodeKind
 from .tiles import IOCore, MemCore, PECore, WORD
 
 assert PECore.OPS == PE_OPS, \
@@ -353,7 +353,7 @@ class FabricModule:
         candidates = pe_alu_candidates(a, b, c, const)   # (n_ops, n_pe)
         res0 = jnp.take_along_axis(candidates, op[None, :], axis=0)[0]
         res0 = res0 & WORD
-        res1 = a & WORD                               # second output: pass-through
+        res1 = a & WORD                        # second output: pass-through
         out_ids = jnp.asarray(self.pe_out)
         vals = vals.at[out_ids[:, 0]].set(res0)
         if self.pe_out.shape[1] > 1:

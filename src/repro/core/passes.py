@@ -34,7 +34,7 @@ import hashlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from .graph import (IO, Interconnect, InterconnectGraph, Node, NodeKind,
+from .graph import (IO, Interconnect, InterconnectGraph, NodeKind,
                     RegisterMuxNode, RegisterNode, SBConnection, Side,
                     SwitchBox, SwitchBoxNode, Tile)
 from .spec import InterconnectSpec, SwitchBoxType
@@ -56,6 +56,10 @@ class PassContext:
     core_fn: CoreFn
     ic: Optional[Interconnect] = None
     log: List[Dict] = field(default_factory=list)
+    #: filled by ``PassManager.run(..., analyze_per_pass=True)``: the
+    #: final AnalysisReport with each diagnostic's ``pass_name`` set to
+    #: the first pass after which the finding appears (and persists)
+    analysis_report: Optional[object] = None
 
     def graphs(self) -> Dict[int, InterconnectGraph]:
         assert self.ic is not None, "materialize_tiles has not run"
@@ -241,22 +245,38 @@ def readyvalid_transform(ctx: PassContext) -> None:
 
 
 def prune_dead_muxes(ctx: PassContext) -> None:
-    """Drop nodes no configuration can ever exercise: fully isolated
-    (no fan-in *and* no fan-out) non-port nodes. Anything connected —
-    including boundary muxes with only one side populated — is kept:
-    removing a connected node would renumber surviving mux inputs and
-    change config-bit semantics. Core ports are interface and always
-    kept. On the stock uniform topologies this pass is a no-op (every
-    generated node is wired), which is exactly what keeps legacy sweep
-    results bit-identical."""
+    """Drop nodes no configuration can ever observe, iterated to a
+    fixpoint: a non-port node with no fan-out drives nothing, so it (and
+    its incoming edges) can go — which may leave an upstream mux
+    observer-free in turn, so the pass repeats until a round removes
+    nothing. Pruning only ever detaches *incoming* edges (see
+    ``InterconnectGraph.prune``), so surviving mux fan-in order — and
+    with it config-bit semantics — is untouched. Two node classes are
+    interface, not waste, and always kept: core ports, and switch-box
+    nodes on an array boundary (their missing on-array consumer is the
+    chip pin). On the stock uniform topologies this pass is a no-op
+    (every generated node is wired), which is exactly what keeps legacy
+    sweep results bit-identical; the ``dead-mux`` analysis rule is the
+    convergence oracle."""
+    from .analysis.framework import AnalysisContext
     removed = 0
+    rounds = 0
     for g in ctx.graphs().values():
-        dead = [n for n in g.nodes()
-                if n.kind != NodeKind.PORT
-                and not n.fan_in and not n.fan_out]
-        g.prune(dead)
-        removed += len(dead)
-    ctx.log.append({"pass": "prune_dead_muxes", "removed": removed})
+        while True:
+            # boundary nodes are only exempt while *connected*: a fully
+            # isolated boundary node is no pin, just leftover hardware
+            dead = [n for n in g.nodes()
+                    if n.kind != NodeKind.PORT
+                    and not n.fan_out
+                    and (not n.fan_in
+                         or not AnalysisContext.faces_off_array(g, n))]
+            if not dead:
+                break
+            g.prune(dead)
+            removed += len(dead)
+            rounds += 1
+    ctx.log.append({"pass": "prune_dead_muxes", "removed": removed,
+                    "rounds": rounds})
 
 
 def freeze(ctx: PassContext) -> None:
@@ -334,32 +354,97 @@ class PassManager:
 
     def run(self, spec: InterconnectSpec,
             core_fn: Optional[CoreFn] = None,
-            ctx: Optional[PassContext] = None) -> Interconnect:
+            ctx: Optional[PassContext] = None,
+            analyze_per_pass: bool = False) -> Interconnect:
         """Compile ``spec`` into the IR by running every (enabled) pass
         in order. ``core_fn`` is the non-serializable escape hatch for
         custom tile contents; ``ctx`` lets tests inject a pre-seeded
-        context (e.g. to run a partial pipeline)."""
+        context (e.g. to run a partial pipeline).
+
+        ``analyze_per_pass`` re-runs the static analyzer after every
+        pass and attributes each surviving diagnostic to the first pass
+        that introduced it (``ctx.analysis_report``) — the "which pass
+        broke my fabric" debugging mode. Transient findings that a later
+        pass legitimately resolves (a half-built pipeline is full of
+        them) are discarded: only findings still present in the final IR
+        are reported."""
         if core_fn is None:
             core_fn = _default_core_fn(spec)
         if ctx is None:
             ctx = PassContext(spec=spec, core_fn=core_fn)
+        snapshots: List[Tuple[str, object]] = []
         for p in self.passes:
             if p.when(spec):
                 p.run(ctx)
+                if analyze_per_pass and ctx.ic is not None:
+                    from .analysis import analyze as _analyze
+                    snapshots.append(
+                        (p.name, _analyze(ctx.ic, spec=spec)))
+        if analyze_per_pass:
+            ctx.analysis_report = _attribute_to_passes(snapshots)
         assert ctx.ic is not None
         return ctx.ic
 
     def compile(self, spec: InterconnectSpec,
                 core_fn: Optional[CoreFn] = None,
-                use_pallas: bool = False):
-        """The front door: spec -> CompiledFabric."""
+                use_pallas: bool = False,
+                analyze: str = "warn",
+                analyze_per_pass: bool = False):
+        """The front door: spec -> CompiledFabric.
+
+        ``analyze`` gates the static analyzer (``repro.core.analysis``)
+        over the compiled IR: ``"warn"`` (default) attaches the report
+        as ``CompiledFabric.diagnostics``; ``"error"`` additionally
+        raises :class:`AnalysisError` when any finding is
+        error-severity; ``"off"`` skips analysis. ``analyze_per_pass``
+        attributes each finding to the pass that introduced it (slower:
+        the analyzer runs once per pass)."""
+        if analyze not in ("off", "warn", "error"):
+            raise ValueError(
+                f"analyze={analyze!r}: use 'error', 'warn' or 'off'")
         from .compile import CompiledFabric
         ctx = PassContext(spec=spec,
                           core_fn=core_fn or _default_core_fn(spec))
-        ic = self.run(spec, core_fn=ctx.core_fn, ctx=ctx)
+        ic = self.run(spec, core_fn=ctx.core_fn, ctx=ctx,
+                      analyze_per_pass=(analyze_per_pass
+                                        and analyze != "off"))
+        report = None
+        if analyze != "off":
+            if ctx.analysis_report is not None:
+                report = ctx.analysis_report
+            else:
+                from .analysis import analyze as _analyze
+                report = _analyze(ic, spec=spec)
+            if analyze == "error":
+                report.raise_if("error")
         return CompiledFabric(spec, ic, pass_log=ctx.log,
                               use_pallas=use_pallas,
-                              cacheable=core_fn is None)
+                              cacheable=core_fn is None,
+                              diagnostics=report)
+
+
+def _attribute_to_passes(snapshots: Sequence[Tuple[str, object]]):
+    """Blame each *final* diagnostic on the pass that introduced it.
+
+    ``snapshots`` is ``[(pass_name, AnalysisReport), ...]`` in pipeline
+    order. A finding is matched across snapshots by ``Diagnostic.key()``
+    (rule + location — messages may carry run-varying counts). The
+    attributed pass is the first pass of the *final contiguous run* of
+    snapshots containing the key: if a finding appeared, was fixed by a
+    later pass, then reappeared, the reappearance is what the user needs
+    to see. Returns the final report with ``pass_name`` filled in."""
+    if not snapshots:
+        return None
+    final_name, final_report = snapshots[-1]
+    key_sets = [{d.key() for d in rep} for _, rep in snapshots]
+    attributed = []
+    for d in final_report:
+        first = len(snapshots) - 1
+        while first > 0 and d.key() in key_sets[first - 1]:
+            first -= 1
+        attributed.append(d.with_pass(snapshots[first][0]))
+    final_report.diagnostics = attributed
+    return final_report
 
 
 def ir_digest(ic: Interconnect) -> str:

@@ -15,7 +15,7 @@ The per-net HPWL reduction is the Pallas kernel `repro.kernels.hpwl`.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 

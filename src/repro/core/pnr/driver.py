@@ -1,13 +1,12 @@
-"""End-to-end PnR driver (§3.4): pack → global place → legalize → anneal →
-route → STA → bitstream, with the paper's α sweep ("sweeping α from 1 to 20
-and choosing the best result post-routing")."""
+"""End-to-end PnR driver (§3.4): pack → global place → legalize →
+anneal → route → STA → bitstream, with the paper's α sweep ("sweeping
+α from 1 to 20 and choosing the best result post-routing")."""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
 
 from repro.core.graph import Interconnect, Node
 from .app import AppGraph

@@ -534,9 +534,11 @@ def route_nets(res: RoutingResources,
             net = RoutedNet(name, src, list(sinks))
             tree_nodes: Dict[int, float] = {src: 0.0}
             own: Set[int] = {src}
-            for sink in sorted(sinks,
-                               key=lambda s: -abs(res.xy[s][0] - res.xy[src][0])
-                               - abs(res.xy[s][1] - res.xy[src][1])):
+            def _span(s):
+                return (-abs(res.xy[s][0] - res.xy[src][0])
+                        - abs(res.xy[s][1] - res.xy[src][1]))
+
+            for sink in sorted(sinks, key=_span):
                 path = _astar(res, tree_nodes, sink, cost_of,
                               crit.get(name, 0.0), own, blocked, tie=tie,
                               h_arr=h_fields.get(sink))

@@ -9,9 +9,8 @@ metric behind Figs. 11/14/15.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
-import numpy as np
 
 from repro.core.graph import NodeKind
 from .packing import PackedGraph

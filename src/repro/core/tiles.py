@@ -7,9 +7,8 @@ can implement, intrinsic delay).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
-import numpy as np
 
 from .graph import Core, PortSpec
 

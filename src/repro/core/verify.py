@@ -21,7 +21,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .graph import Interconnect, NodeKind
+from .graph import Interconnect
 from .lowering import FabricModule
 
 

@@ -1,4 +1,5 @@
-"""Ready-valid (statically configured NoC) backend — Canal §3.3, Figs. 5–6.
+"""Ready-valid (statically configured NoC) backend — Canal §3.3,
+Figs. 5–6.
 
 Same IR, different lowering:
 
@@ -30,7 +31,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import Interconnect, NodeKind
+from repro.core.graph import Interconnect
 from repro.core.lowering import FabricModule
 
 
@@ -139,7 +140,7 @@ class RVFabric(FabricModule):
 
         def body(_, r):
             r_ext = jnp.concatenate([r, jnp.ones(1, jnp.int32)])
-            cr = r_ext[cons]                               # (N, C) consumer ready
+            cr = r_ext[cons]                        # (N, C) consumer ready
             csel = jnp.concatenate([sel, jnp.zeros(1, jnp.int32)])[cons]
             used = (csel == cons_idx) & (cons < a.num_nodes)
             # Fig. 5: ready_j OR not-used_j, ANDed across consumers

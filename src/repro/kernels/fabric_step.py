@@ -183,7 +183,8 @@ def _fabric_sweep_batch_jit(vals_ext: jnp.ndarray, src: jnp.ndarray,
     b_pad = pl.cdiv(b, bb) * bb
     n_pad = pl.cdiv(n, BLOCK_N) * BLOCK_N
     v_pad = pl.cdiv(vals_ext.shape[1], 128) * 128
-    vals_p = jnp.pad(vals_ext, ((0, b_pad - b), (0, v_pad - vals_ext.shape[1])))
+    vals_p = jnp.pad(vals_ext,
+                     ((0, b_pad - b), (0, v_pad - vals_ext.shape[1])))
     src_p = jnp.pad(src, ((0, n_pad - n), (0, 0)))
     sel_p = jnp.pad(sel, ((0, b_pad - b), (0, n_pad - n)))
     grid = (b_pad // bb, n_pad // BLOCK_N)

@@ -26,11 +26,9 @@ import json
 import subprocess
 import sys
 import time
-import traceback
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (SHAPES, cell_is_runnable, get_config,
@@ -41,7 +39,6 @@ from repro.models import build_model
 from repro.optim import adamw, adafactor, cosine_schedule
 from repro.roofline.analysis import (active_params, count_params,
                                      model_flops, roofline_terms)
-from repro.roofline.hlo_parse import link_traffic_bytes, parse_collectives
 from repro.train.step import (init_train_state, make_train_step,
                               train_state_specs)
 

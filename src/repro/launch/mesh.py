@@ -10,7 +10,6 @@ device state (the dry-run sets XLA_FLAGS before any jax import).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec

@@ -10,10 +10,8 @@ mesh; in this container it runs smoke-scale configs on the host mesh.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
-import numpy as np
 
 
 def main() -> None:
@@ -33,12 +31,11 @@ def main() -> None:
 
     import jax
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.ckpt import CheckpointManager
     from repro.configs import get_config, get_smoke
     from repro.data import SyntheticTokens
-    from repro.launch.mesh import make_host_mesh, tree_shardings
+    from repro.launch.mesh import make_host_mesh
     from repro.models import build_model
     from repro.optim import adamw, cosine_schedule
     from repro.runtime import StragglerMonitor, Supervisor

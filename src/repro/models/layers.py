@@ -449,7 +449,8 @@ def spec_rglru(cfg: ModelConfig) -> Dict:
 def rglru(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
           state: Optional[jnp.ndarray] = None
           ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    """x: (B, S, D). Real-Gated LRU: h_t = a_t ⊙ h_{t-1} + sqrt(1-a²)⊙i_t."""
+    """x: (B, S, D). Real-Gated LRU:
+    h_t = a_t ⊙ h_{t-1} + sqrt(1-a²)⊙i_t."""
     xb = x @ p["w_x"]                                   # (B, S, W)
     ga = jax.nn.sigmoid((x @ p["w_gate_a"]).astype(jnp.float32))
     gx = jax.nn.sigmoid((x @ p["w_gate_x"]).astype(jnp.float32))

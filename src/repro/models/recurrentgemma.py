@@ -9,7 +9,7 @@ groups + 2 tail rglru layers.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,8 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import layers as L
 from .config import ModelConfig
-from .stacking import (scan_layers, scan_layers_with_cache, stacked_init,
-                       stacked_specs)
+from .stacking import scan_layers, stacked_init, stacked_specs
 
 
 class RecurrentGemmaLM:

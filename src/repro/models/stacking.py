@@ -2,7 +2,7 @@
 scan over the stack, remat policies. Constant compile time in depth."""
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

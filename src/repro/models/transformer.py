@@ -10,7 +10,7 @@ frontend: ``input_specs`` feeds precomputed patch embeddings).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +18,8 @@ from jax.sharding import PartitionSpec as P
 
 from . import layers as L
 from .config import ModelConfig
-from .stacking import (remat_wrap, scan_layers, scan_layers_with_cache,
-                       stacked_init, stacked_specs)
+from .stacking import (scan_layers, scan_layers_with_cache, stacked_init,
+                       stacked_specs)
 
 
 class TransformerLM:

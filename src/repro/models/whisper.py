@@ -17,8 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import layers as L
 from .config import ModelConfig
-from .stacking import (scan_layers, scan_layers_with_cache, stacked_init,
-                       stacked_specs)
+from .stacking import scan_layers, stacked_init, stacked_specs
 
 
 class WhisperEncDec:

@@ -12,8 +12,7 @@ or 6·N_active·D (MoE) measures how much of the compiled compute is
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 from .hw import ChipSpec, TPU_V5E
 

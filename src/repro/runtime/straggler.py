@@ -13,8 +13,8 @@ keeps an EWMA of per-host step times, flags hosts slower than
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 import numpy as np
 

@@ -232,6 +232,8 @@ class DSEService:
                     "store_misses": self.executor.store_misses,
                     "coalesced": self.executor.coalesced,
                     "pnr_computations": self.executor.pnr_computations,
+                    "analysis_rejections":
+                        self.executor.analysis_rejections,
                 },
                 "store": store_stats,
             }

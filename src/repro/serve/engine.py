@@ -7,7 +7,6 @@ for the decode_* assigned shapes and the serve example.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 

@@ -4,13 +4,11 @@ optimizer math) and optional int8 error-feedback gradient compression on
 the cross-pod reduction (runtime/compression.py)."""
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ModelConfig
 from repro.optim import Optimizer
 
 

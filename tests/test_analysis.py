@@ -1,0 +1,387 @@
+"""The ``canal.analyze`` static-analysis framework (ISSUE 6).
+
+Three layers of coverage:
+
+* **clean property** — every spec drawn from a strategy over
+  ``InterconnectSpec`` space compiles diagnostic-clean through
+  ``DEFAULT_PASSES`` (the pipeline's output is well-formed by
+  construction, and the analyzer knows the difference between interface
+  and waste);
+* **mutation suite** — each built-in rule flags its seeded IR violation
+  with the right rule id and location (the rules actually detect what
+  they claim to detect);
+* **integration** — the ``analyze=`` compile knob, per-pass attribution,
+  the DSE pre-screen (PnR skipped, verdict persisted, counter exposed),
+  the lint CLI's exit-code contract, and the ``prune_dead_muxes``
+  fixpoint with the ``dead-mux`` rule as convergence oracle.
+"""
+import json
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+import canal
+from repro.configs.cgra_amber import smoke
+from repro.core.analysis import (AnalysisError, Severity, analyze)
+from repro.core.analysis.framework import RULES
+from repro.core.analysis.lint import run as lint_run
+from repro.core.dse import SweepExecutor
+from repro.core.graph import IO, NodeKind, SwitchBoxNode
+from repro.core.passes import (DEFAULT_PASSES, IRPass, PassContext,
+                               PassManager, _default_core_fn, ir_digest,
+                               prune_dead_muxes)
+from repro.core.pnr.app import app_pointwise
+from repro.core.spec import InterconnectSpec
+
+STOCK = dict(width=4, height=4, num_tracks=2, io_ring=True,
+             reg_density=1.0)
+
+
+def build(**overrides):
+    spec = InterconnectSpec(**{**STOCK, **overrides})
+    return spec, PassManager().run(spec)
+
+
+def interior_sb(g, io, exclude=()):
+    w, h = g.dims()
+    for n in g.nodes():
+        if (isinstance(n, SwitchBoxNode) and n.io == io
+                and 0 < n.x < w - 1 and 0 < n.y < h - 1
+                and n not in exclude):
+            return n
+    raise AssertionError("no interior SB node")
+
+
+# ---------------------------------------------------------------------------
+# clean property: the pipeline's output carries no diagnostics
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12)
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(1, 4),
+       st.sampled_from(["wilton", "disjoint", "imran"]),
+       st.sampled_from([0.0, 0.5, 1.0]),
+       st.sampled_from([False, True]),
+       st.sampled_from([False, True]))
+def test_default_pipeline_is_diagnostic_clean(width, height, num_tracks,
+                                              sb_type, reg_density,
+                                              io_ring, ready_valid):
+    spec = InterconnectSpec(width=width, height=height,
+                            num_tracks=num_tracks, sb_type=sb_type,
+                            reg_density=reg_density, io_ring=io_ring,
+                            ready_valid=ready_valid)
+    fab = canal.compile(spec, analyze="error")   # raises if not clean
+    report = fab.diagnostics
+    assert report is not None and report.ok()
+    # no waste either: the pipeline never leaves dead/unreachable
+    # hardware behind (capacity warnings from static-routability are
+    # honest on tight fabrics — e.g. 1-track arrays — and allowed)
+    waste = {"dead-mux", "unreachable-node"}
+    assert [d for d in report if d.rule in waste] == []
+
+
+def test_stock_configs_lint_clean_at_error():
+    from test_spec_golden import GOLDEN_SPECS, IR_BUILT
+    for name in IR_BUILT:
+        fab = canal.compile(GOLDEN_SPECS[name], analyze="error")
+        assert fab.diagnostics.ok(), name
+
+
+# ---------------------------------------------------------------------------
+# mutation suite: every rule flags its seeded violation, id + location
+# ---------------------------------------------------------------------------
+
+def the_finding(ic, rule):
+    report = analyze(ic, rules=[rule])
+    assert report.rule_ids() == [rule], report.render()
+    return report.by_rule(rule)[0]
+
+
+def test_rule_combinational_loop():
+    _, ic = build()
+    g = ic.graphs[16]
+    a = interior_sb(g, IO.SB_IN)
+    b = interior_sb(g, IO.SB_IN, exclude=(a,))
+    for n in (a, b):
+        for s in list(n.fan_in):
+            s.remove_edge(n)
+    a.add_edge(b)
+    b.add_edge(a)        # fan-in 1 each: hardwired, unbreakable
+    d = the_finding(ic, "combinational-loop")
+    assert d.severity == Severity.ERROR
+    assert d.tile in ((a.x, a.y), (b.x, b.y))
+
+
+def test_rule_dead_mux():
+    _, ic = build()
+    g = ic.graphs[16]
+    n = interior_sb(g, IO.SB_OUT)
+    for dst in list(n.fan_out):
+        n.remove_edge(dst)
+    d = the_finding(ic, "dead-mux")
+    assert d.tile == (n.x, n.y) and d.node == repr(n)
+
+
+def test_rule_unreachable_node():
+    _, ic = build()
+    g = ic.graphs[16]
+    n = interior_sb(g, IO.SB_IN)
+    for src in list(n.fan_in):
+        src.remove_edge(n)
+    d = the_finding(ic, "unreachable-node")
+    assert d.tile == (n.x, n.y) and d.node == repr(n)
+
+
+def test_rule_dangling_port():
+    _, ic = build()
+    g = ic.graphs[16]
+    port = g.tiles[(1, 1)].ports["data0"]
+    for src in list(port.fan_in):
+        src.remove_edge(port)
+    d = the_finding(ic, "dangling-port")
+    assert d.severity == Severity.ERROR and d.tile == (1, 1)
+    assert "data0" in d.message
+
+
+def test_rule_fanin_overflow():
+    _, ic = build()
+    ic.config_data_width = 1     # select field holds 2 values; fan-in > 2
+    d = the_finding(ic, "fanin-overflow")
+    assert d.severity == Severity.ERROR
+
+
+def test_rule_sb_topology_conformance():
+    _, ic = build()
+    g = ic.graphs[16]
+    sb = g.tiles[(1, 1)].switchbox
+    (tf, sf, tt, st_) = sb.internal_connections[0]
+    sb.get_sb(sf, tf, IO.SB_IN).remove_edge(sb.get_sb(st_, tt, IO.SB_OUT))
+    d = the_finding(ic, "sb-topology-conformance")
+    assert d.tile == (1, 1) and "wilton" in d.message
+
+
+def test_rule_rv_handshake():
+    _, ic = build(ready_valid=True)
+    g = ic.graphs[16]
+    reg = next(n for n in g.nodes() if n.kind == NodeKind.REGISTER)
+    reg.attributes.pop("rv_fifo")
+    d = the_finding(ic, "rv-handshake")
+    assert d.tile == (reg.x, reg.y) and d.node == repr(reg)
+
+
+def test_rule_static_routability():
+    _, ic = build()
+    g = ic.graphs[16]
+    tile = g.tiles[(1, 1)]
+    ports = [tile.ports[p.name] for p in tile.core.inputs()]
+    one = ports[0].fan_in[0]
+    for p in ports:              # all operands from one driver: supply 1
+        for src in list(p.fan_in):
+            src.remove_edge(p)
+        one.add_edge(p)
+    d = the_finding(ic, "static-routability")
+    assert d.tile == (1, 1)
+
+
+def test_unknown_rule_id_raises():
+    _, ic = build()
+    with pytest.raises(ValueError, match="unknown analysis rules"):
+        analyze(ic, rules=["no-such-rule"])
+
+
+def test_severity_remap():
+    _, ic = build()
+    g = ic.graphs[16]
+    n = interior_sb(g, IO.SB_OUT)
+    for dst in list(n.fan_out):
+        n.remove_edge(dst)
+    report = analyze(ic, rules=["dead-mux"],
+                     severities={"dead-mux": "info"})
+    assert report.by_rule("dead-mux") and report.warnings == []
+    assert report.ok("warning")
+
+
+# ---------------------------------------------------------------------------
+# prune fixpoint (dead-mux as the regression oracle)
+# ---------------------------------------------------------------------------
+
+def test_prune_dead_muxes_iterates_to_fixpoint():
+    """Severing a pipeline stage's output leaves a chain SB_OUT -> REG ->
+    RMUX in which each removal exposes the next: one round cannot clear
+    it, the fixpoint must."""
+    spec, ic = build()
+    g = ic.graphs[16]
+    rmux = next(m for m in g.reg_muxes if 0 < m.x < 3 and 0 < m.y < 3)
+    for dst in list(rmux.fan_out):
+        rmux.remove_edge(dst)
+    before = analyze(ic, rules=["dead-mux"])
+    assert len(before) >= 3      # rmux + reg + sb_out all unobservable
+    ctx = PassContext(spec=spec, core_fn=_default_core_fn(spec), ic=ic)
+    prune_dead_muxes(ctx)
+    entry = ctx.log[-1]
+    assert entry["removed"] >= 3 and entry["rounds"] >= 2
+    # convergence oracle: nothing dead survives the fixpoint
+    assert len(analyze(ic, rules=["dead-mux"])) == 0
+    assert rmux not in list(g.nodes())
+
+
+def test_prune_is_noop_on_stock_and_digest_stable():
+    """The fixpoint prune (with its boundary exemption) must not touch
+    the stock uniform topologies — golden IR digests stay put."""
+    spec = InterconnectSpec(**STOCK)
+    fab = canal.compile(spec)
+    log = [e for e in fab.pass_log if e["pass"] == "prune_dead_muxes"]
+    assert log[0]["removed"] == 0 and log[0]["rounds"] == 0
+
+
+# ---------------------------------------------------------------------------
+# compile integration: the analyze= knob and per-pass attribution
+# ---------------------------------------------------------------------------
+
+def test_compile_analyze_knob():
+    spec = InterconnectSpec(**STOCK)
+    assert canal.compile(spec, analyze="off").diagnostics is None
+    fab = canal.compile(spec)                      # default: "warn"
+    assert fab.diagnostics is not None and fab.diagnostics.ok()
+    bad = InterconnectSpec(**{**STOCK, "cb_track_fc": 0.01})
+    warned = canal.compile(bad)                    # records, no raise
+    assert not warned.diagnostics.ok()
+    with pytest.raises(AnalysisError) as ei:
+        canal.compile(bad, analyze="error")
+    assert ei.value.report.by_rule("dangling-port")
+    with pytest.raises(ValueError, match="analyze="):
+        canal.compile(spec, analyze="loud")
+
+
+def test_compiled_fabric_reanalyze_subset():
+    fab = canal.compile(InterconnectSpec(**STOCK))
+    report = fab.analyze(rules=["combinational-loop", "dead-mux"])
+    assert set(report.rules_run) == {"combinational-loop", "dead-mux"}
+
+
+def test_per_pass_attribution():
+    """A custom pass that severs a port is blamed — not the stock passes
+    that built the (clean) fabric before it."""
+    def sever(ctx):
+        g = ctx.graphs()[16]
+        port = g.tiles[(1, 1)].ports["data0"]
+        for src in list(port.fan_in):
+            src.remove_edge(port)
+
+    passes = tuple(DEFAULT_PASSES) + (IRPass("sever_port", sever),)
+    fab = PassManager(passes).compile(
+        InterconnectSpec(**STOCK), analyze_per_pass=True)
+    found = fab.diagnostics.by_rule("dangling-port")
+    assert found and all(d.pass_name == "sever_port" for d in found)
+
+
+def test_per_pass_mode_does_not_change_ir():
+    spec = InterconnectSpec(**STOCK)
+    plain = canal.compile(spec, analyze="off")
+    attributed = canal.compile(spec, analyze="error",
+                               analyze_per_pass=True)
+    assert ir_digest(plain.interconnect) == \
+        ir_digest(attributed.interconnect)
+
+
+# ---------------------------------------------------------------------------
+# lowered-scope verification (verify.py folded into the framework)
+# ---------------------------------------------------------------------------
+
+def test_compiled_fabric_verify_runs_lowered_rules():
+    fab = canal.compile(InterconnectSpec(width=2, height=2, num_tracks=2,
+                                         reg_density=1.0))
+    report = fab.verify()
+    assert set(report.rules_run) == {"structural-equivalence",
+                                     "config-sweep"}
+    assert report.ok()
+    info = report.by_rule("config-sweep")
+    assert info and "verified" in info[0].message
+
+
+def test_lowered_rules_not_in_default_scope():
+    _, ic = build()
+    report = analyze(ic)
+    assert "config-sweep" not in report.rules_run
+    assert RULES["config-sweep"].scope == "lowered"
+
+
+# ---------------------------------------------------------------------------
+# DSE pre-screen: skip PnR, persist + round-trip the verdict
+# ---------------------------------------------------------------------------
+
+def test_executor_skips_pnr_for_invalid_spec(tmp_path):
+    apps = {"pw": lambda: app_pointwise(1)}
+    bad = InterconnectSpec(**{**STOCK, "cb_track_fc": 0.01})
+    ex = SweepExecutor(apps=apps, store=str(tmp_path))
+    rec = ex.run_point(bad)
+    assert ex.analysis_rejections == 1 and ex.pnr_computations == 0
+    assert rec["analysis"]["clean"] is False
+    entry = rec["apps"]["pw"]
+    assert entry["success"] is False
+    assert entry["skipped"] == "static-analysis"
+    assert "dangling-port" in entry["error"]
+
+    # verdict round-trips through the store: a fresh executor gets the
+    # rejected record as a hit and never re-analyzes or re-routes
+    ex2 = SweepExecutor(apps=apps, store=str(tmp_path))
+    rec2 = ex2.run_point(bad)
+    assert ex2.store_hits == 1 and ex2.analysis_rejections == 0
+    assert rec2["analysis"] == rec["analysis"]
+
+    # valid specs still compute — and carry their (clean) verdict
+    good = InterconnectSpec(**STOCK)
+    rec3 = ex2.run_point(good)
+    assert ex2.pnr_computations == 1
+    assert rec3["analysis"]["clean"] is True
+    assert rec3["apps"]["pw"]["success"] is True
+
+
+def test_service_exposes_analysis_rejections(tmp_path):
+    from repro.serve.dse_service import DSEService
+    apps = {"pw": lambda: app_pointwise(1)}
+    bad = InterconnectSpec(**{**STOCK, "cb_track_fc": 0.01})
+    with DSEService(apps=apps,
+                    store=canal.ResultStore(str(tmp_path))) as svc:
+        rec = svc.query(bad)
+        assert rec["analysis"]["clean"] is False
+        stats = svc.stats()
+        assert stats["executor"]["analysis_rejections"] == 1
+        assert stats["executor"]["pnr_computations"] == 0
+
+
+# ---------------------------------------------------------------------------
+# lint CLI: exit codes and artifact shape
+# ---------------------------------------------------------------------------
+
+def test_lint_cli_contract(tmp_path, capsys):
+    good = tmp_path / "good.json"
+    good.write_text(InterconnectSpec(**STOCK).to_json())
+    bad = tmp_path / "bad.json"
+    bad.write_text(InterconnectSpec(
+        **{**STOCK, "cb_track_fc": 0.01}).to_json())
+    artifact = tmp_path / "diag.json"
+
+    assert lint_run([str(good),
+                     "--config", "repro.configs.cgra_amber:smoke"]) == 0
+    assert lint_run([str(bad), "--format", "json",
+                     "-o", str(artifact)]) == 1
+    doc = json.loads(artifact.read_text())
+    assert doc["clean"] is False
+    target = doc["targets"][str(bad)]
+    rules = {d["rule"] for d in target["diagnostics"]}
+    assert "dangling-port" in rules
+
+    capsys.readouterr()
+    assert lint_run([]) == 2                       # no targets
+    assert lint_run([str(good), "--rules", "nope"]) == 2
+    assert lint_run([str(tmp_path / "missing.json")]) == 2
+    assert lint_run(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "combinational-loop" in out
+
+
+def test_lint_smoke_config_object():
+    """--config accepts a zero-arg factory returning a CompiledFabric."""
+    assert smoke() is not None  # the factory the CI lint step points at
+    assert lint_run(["--config", "repro.configs.cgra_amber:smoke"]) == 0

@@ -3,9 +3,9 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.edsl import (SB_TOPOLOGIES, SwitchBoxType,
-                             create_uniform_interconnect, sides_for)
-from repro.core.graph import IO, NodeKind, Side
-from repro.core.tiles import PECore
+                             create_uniform_interconnect)
+from repro.core.spec import sides_for
+from repro.core.graph import IO, Side
 
 
 @given(st.integers(2, 10),

@@ -1,5 +1,4 @@
 """Loop-aware HLO cost model: the roofline's foundation."""
-import numpy as np
 import pytest
 
 import jax

@@ -1,14 +1,12 @@
 """PnR pipeline: packing, placement, routing, timing (§3.4)."""
-import numpy as np
 import pytest
 
 from repro.core.edsl import SwitchBoxType, create_uniform_interconnect
 from repro.core.pnr import place_and_route
 from repro.core.pnr.app import (BENCH_APPS, app_butterfly, app_fir,
-                                app_pointwise, app_tree_reduce)
+                                app_tree_reduce)
 from repro.core.pnr.global_place import assign_ios, global_place, legalize
 from repro.core.pnr.packing import pack
-from repro.core.pnr.route import RoutingError
 
 
 @pytest.fixture(scope="module")

@@ -23,8 +23,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core.edsl import SwitchBoxType, create_uniform_interconnect
 from repro.core.pnr import place_and_route
 from repro.core.pnr.app import BENCH_APPS
-from repro.core.pnr.route import (COARSE_INF, RoutingResources,
-                                  route_app, route_nets)
+from repro.core.pnr.route import COARSE_INF, RoutingResources, route_nets
 
 
 @functools.lru_cache(maxsize=None)
@@ -152,7 +151,6 @@ def test_minplus_routes_legal_and_delay_equivalent(app_name):
 def test_minplus_detects_unroutable_like_python():
     """Coarse-unreachable pruning must not mask real failures: Disjoint
     under track pressure fails on both engines (§4.2.1)."""
-    from repro.core.pnr.route import RoutingError  # noqa: F401
 
     ic = create_uniform_interconnect(
         width=8, height=8, num_tracks=4, sb_type=SwitchBoxType.DISJOINT,

@@ -1,7 +1,6 @@
 """The declarative front door: InterconnectSpec serialization, the pass
 pipeline's determinism and legacy equivalence, CompiledFabric end-to-end,
 and the spec-digest cache keys of the DSE executor."""
-import json
 import subprocess
 import sys
 
@@ -10,8 +9,7 @@ import pytest
 
 import canal
 from repro.core.compile import CompiledFabric
-from repro.core.passes import (DEFAULT_PASSES, IRPass, PassContext,
-                               PassManager, freeze, ir_digest,
+from repro.core.passes import (IRPass, PassManager, freeze, ir_digest,
                                materialize_tiles, prune_dead_muxes)
 from repro.core.spec import (InterconnectSpec, SwitchBoxType,
                              spec_from_kwargs, spec_grid)

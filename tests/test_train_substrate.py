@@ -1,6 +1,5 @@
 """Training substrate: loss, grad accumulation, optimizers, data, ckpt,
 fault tolerance, compression."""
-import os
 
 import numpy as np
 import pytest
@@ -11,7 +10,7 @@ import jax.numpy as jnp
 from repro.configs import get_smoke
 from repro.data import SyntheticTokens
 from repro.models import build_model
-from repro.optim import adafactor, adamw, cosine_schedule
+from repro.optim import adafactor, adamw
 from repro.train.step import (init_train_state, loss_fn, make_train_step,
                               train_state_specs)
 
@@ -80,7 +79,6 @@ def test_adafactor_trains_and_is_lean(tiny):
     opt = adafactor(3e-3)
     state = init_train_state(model, opt, jax.random.PRNGKey(0))
     # factored second moment: opt state much smaller than adamw's
-    import math
     n_params = sum(p.size for p in jax.tree.leaves(state.params))
     n_f32 = sum(v.size for v in jax.tree.leaves(state.opt)
                 if v.dtype == jnp.float32)
@@ -158,7 +156,7 @@ def test_checkpoint_detects_mismatch(tmp_path, tiny):
 # ------------------------------------------------------------- runtime
 def test_supervisor_restarts_from_checkpoint(tmp_path, tiny):
     from repro.ckpt import CheckpointManager
-    from repro.runtime import Supervisor, TrainingFailure
+    from repro.runtime import Supervisor
     cfg, model = tiny
     opt = adamw(1e-3)
     state = init_train_state(model, opt, jax.random.PRNGKey(0))
