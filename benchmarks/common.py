@@ -54,3 +54,27 @@ def append_bench(name: str, record: Dict) -> str:
     history.append(dict(record, ts=time.time()))
     atomic_write_json(path, history)
     return path
+
+
+def load_bench(name: str, metric: str = None) -> list:
+    """Read a repo-root trajectory written by :func:`append_bench`.
+
+    Without ``metric``: the full record list ([] when the file is
+    missing or corrupt — consumers must tolerate a restarted
+    trajectory). With ``metric``: that field's value per record, with
+    ``None``/missing values *skipped* — a null metric marks a run where
+    the measurement was meaningless (e.g. ``store_warm_speedup`` on a
+    warm-first-pass run) and must not pollute medians or regression
+    gates."""
+    path = os.path.join(REPO_ROOT, f"{name}.json")
+    try:
+        with open(path) as f:
+            history = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+    if not isinstance(history, list):
+        history = [history]
+    if metric is None:
+        return history
+    return [r[metric] for r in history
+            if isinstance(r, dict) and r.get(metric) is not None]

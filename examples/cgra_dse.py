@@ -54,6 +54,30 @@ def main():
           f"warm-query avg {st['latency_avg_s'] * 1e3:.1f} ms "
           f"(store: {st['store']['records']} records on disk)")
 
+    print("== search-driven DSE (greedy selector vs full grid) ==")
+    # instead of enumerating the grid, let a selector walk it: the
+    # greedy hill-climber starts at the base point, explores axis
+    # neighbors, and stops at the budget — typically touching fewer
+    # points than the grid while landing on the same Pareto frontier.
+    # Evaluation goes through the same store-backed executor, so
+    # re-running the search is zero-PnR.
+    res = svc.recommend(base, {"num_tracks": (2, 3, 4, 5, 6)},
+                        objective="area",
+                        constraints={"min_routability": 1.0},
+                        budget=4, batch_size=2)
+    for p in res["frontier"]:
+        m = p["metrics"]
+        print(f"  frontier: tracks={p['spec']['num_tracks']} "
+              f"area={m['area']:.0f}um2 crit={m['critical_path_ns']:.2f}ns "
+              f"routability={m['routability']:.2f}")
+    best = res["best"]
+    label = (f"tracks={best['spec']['num_tracks']}" if best
+             else "none feasible")
+    print(f"  best (min area, fully routable): {label} "
+          f"after {res['stats']['evaluated']} evaluations "
+          f"(grid is {res['stats']['space_size']} points; "
+          f"{res['stats']['executor']['pnr_computations']} new PnR)")
+
     print("== pod-fabric DSE (Canal router on the ICI torus) ==")
     rng = np.random.default_rng(0)
     flows = [((int(rng.integers(0, 4)), int(rng.integers(0, 4))),

@@ -27,6 +27,12 @@ Compiles run the static analyzer by default
 and ``python -m canal.lint`` is the CLI over spec files and importable
 configs.
 
+Beyond grids, ``canal.search(base, axes, selector="greedy", ...)``
+runs the search-driven DSE optimizer (random / greedy / evolutionary
+selectors, Pareto frontier over area, critical-path delay and
+routability, store-memoized evaluation); ``python -m canal.search`` is
+its CLI and ``canal.serve(...).recommend(...)`` the serving verb.
+
 Everything here re-exports from :mod:`repro.core`; the legacy
 ``repro.core.edsl.create_uniform_interconnect`` entry point still works
 as a deprecation shim over the same pipeline.
@@ -58,10 +64,43 @@ def serve(store=None, **kwargs):
     return _serve(store=store, **kwargs)
 
 
+def search(base=None, axes=None, **kwargs):
+    """Search-driven DSE (`repro.core.search.search`): a selector
+    (``"random"`` / ``"greedy"`` / ``"evolutionary"``) proposes
+    candidate specs over ``axes`` around ``base``, a store-memoized
+    executor evaluates them in batches, and the Pareto frontier over
+    (area, critical-path delay, routability) comes back as a
+    ``SearchResult``.
+
+        result = canal.search(base, {"num_tracks": (2, 3, 4, 5, 6)},
+                              selector="greedy", objective="area",
+                              constraints={"min_routability": 1.0},
+                              budget=8, store=".canal_store")
+        best = result.best("area", {"min_routability": 1.0})
+
+    Lazy import, like :func:`serve`: searching pulls in the JAX-backed
+    execution stack.
+
+    Note ``import canal.search`` names the CLI *module* (the
+    ``python -m canal.search`` entry point) and shadows this function
+    on the package — call ``canal.search(...)`` without importing the
+    submodule, or use ``repro.core.search.search`` directly."""
+    from repro.core.search import search as _search
+    return _search(base, axes, **kwargs)
+
+
+def SearchSpace(base, axes):
+    """Build a `repro.core.search.SearchSpace` (lazy import — see
+    :func:`search`)."""
+    from repro.core.search import SearchSpace as _SearchSpace
+    return _SearchSpace(base, axes)
+
+
 __all__ = [
     "AnalysisError", "AnalysisPass", "AnalysisReport", "CompiledFabric",
     "Diagnostic", "Severity", "analyze", "register_rule", "rule_table",
     "compile", "DEFAULT_PASSES", "IRPass", "PassContext",
     "PassManager", "ir_digest", "InterconnectSpec", "SwitchBoxType",
     "sides_for", "spec_from_kwargs", "spec_grid", "ResultStore", "serve",
+    "search", "SearchSpace",
 ]

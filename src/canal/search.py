@@ -1,0 +1,12 @@
+"""``python -m canal.search`` — search-driven DSE CLI.
+
+Thin entry point; the implementation lives in
+:mod:`repro.core.search.cli`. See that module (or ``--help``) for the
+axes/selector/constraint flags and the exit-code contract. Note the
+function ``canal.search(...)`` (the library API) is defined on the
+``canal`` package itself, not in this module.
+"""
+from repro.core.search.cli import build_parser, run  # noqa: F401
+
+if __name__ == "__main__":
+    raise SystemExit(run())

@@ -46,7 +46,7 @@ from .pnr import place_and_route
 from .pnr.app import BENCH_APPS
 from .spec import (InterconnectSpec, SwitchBoxType, spec_from_kwargs,
                    spec_grid)
-from .store import STORE_ENV, ResultStore
+from .store import STORE_ENV, ResultStore, record_metrics
 
 def _as_spec(point) -> InterconnectSpec:
     """Canonicalize a design point: an InterconnectSpec passes through, a
@@ -416,34 +416,46 @@ class SweepExecutor:
             split_fifo_ctrl_delay=self.split_fifo_ctrl_delay)
 
     def record_usable(self, rec: Dict) -> bool:
-        """Whether a stored record covers this executor's workload: the
-        exact app set (record shape must match what the sweep consumers
-        expect), and at least the requested emulation — a record emulated
-        for ``>=`` the requested cycles is a hit (its ``emulation``
-        entries then reflect the longer stored run), so executors with
-        differing ``emulate_cycles`` sharing one store converge on the
-        deepest record instead of thrashing overwrites. A record computed
-        without emulation cannot serve an emulating executor. The single
-        definition of a store *hit* — the serving layer delegates here.
+        """Whether a stored record covers this executor's workload: a
+        *superset* of this executor's app set (``ResultStore.put`` merges
+        app maps, so a shared store accumulates the union — the lookup
+        serves a filtered view matching ``self.apps``), and at least the
+        requested emulation per app — an app emulated for ``>=`` the
+        requested cycles is covered (its ``emulation`` entry then
+        reflects the longer stored run), so executors with differing
+        ``emulate_cycles`` sharing one store converge on the deepest
+        record instead of thrashing overwrites. Merged records stamp
+        ``emulate_cycles`` per app entry; unmerged ones fall back to the
+        record-level field, and an app with no cycle claim at all cannot
+        serve an emulating executor. The single definition of a store
+        *hit* — the serving layer delegates here.
 
         App identity is *by name*: the store trusts that one app name
         denotes one workload. Distinct workloads registered under the
         same name against a shared store would silently serve each
-        other's records — give them distinct names (or stores). And
-        since the app-set match is exact with overwrite-on-miss,
-        executors with *different* app sets sharing one store alternate
-        misses and overwrite each other's records for the same digest —
-        use a store root per workload when app sets differ."""
-        if set(rec.get("apps", {})) != set(self.apps):
+        other's records — give them distinct names (or stores)."""
+        apps = rec.get("apps")
+        if not isinstance(apps, dict) or not set(self.apps) <= set(apps):
             return False
         if self.emulate_cycles == 0:
             return True
-        stored = rec.get("emulate_cycles")
-        return isinstance(stored, int) and stored >= self.emulate_cycles
+        rec_cycles = rec.get("emulate_cycles")
+        for name in self.apps:
+            entry = apps[name]
+            stored = entry.get("emulate_cycles", rec_cycles) \
+                if isinstance(entry, dict) else rec_cycles
+            if not (isinstance(stored, int)
+                    and stored >= self.emulate_cycles):
+                return False
+        return True
 
     def _store_lookup(self, digest: str) -> Optional[Dict]:
         """Consult the store; unusable records (see :meth:`record_usable`)
-        are misses and get recomputed + overwritten."""
+        are misses and get recomputed + merged in. A usable record whose
+        merged app map is a *strict* superset of this executor's apps is
+        served as a filtered view (only ``self.apps`` entries, metrics
+        recomputed over that view) so sweep consumers see the shape they
+        asked for."""
         if self.store is None:
             return None
         rec = self.store.get(digest)
@@ -453,7 +465,22 @@ class SweepExecutor:
                 self.store_hits += 1
             else:
                 self.store_misses += 1
-        return rec if usable else None
+        if not usable:
+            return None
+        if set(rec["apps"]) != set(self.apps):
+            rec = dict(rec, apps={name: rec["apps"][name]
+                                  for name in self.apps})
+            rec["metrics"] = record_metrics(rec)
+        return rec
+
+    def probe(self, digest: str) -> Optional[Dict]:
+        """Public single store probe for a resolved digest: the usable
+        record, or None (counted as exactly one store hit or miss). The
+        serving layer's cold-point path probes here once and threads the
+        verdict into ``run_points(..., assume_cold=True)`` — each cold
+        point hits the store exactly once instead of probing again
+        inside ``run_point``."""
+        return self._store_lookup(digest)
 
     def _store_put(self, spec: InterconnectSpec, rec: Dict) -> None:
         if self.store is not None:
@@ -462,7 +489,8 @@ class SweepExecutor:
     def run_point(self, point,
                   extra: Optional[Dict] = None,
                   defer_emulation: bool = False,
-                  pending: Optional[List[Future]] = None) -> Dict:
+                  pending: Optional[List[Future]] = None,
+                  assume_cold: bool = False) -> Dict:
         """One design point -> one sweep record, store-backed.
 
         ``point`` is an :class:`InterconnectSpec` (or a legacy kwargs
@@ -481,7 +509,13 @@ class SweepExecutor:
         coalesced request, the leader's batch — is registered there so
         ``join_pending(pending)`` waits on exactly the futures this
         run's records depend on (callers without a list join-all via
-        bare :meth:`join_pending`)."""
+        bare :meth:`join_pending`).
+
+        ``assume_cold=True`` skips the leader's store probe: the caller
+        asserts it already probed this point's digest (via
+        :meth:`probe`) and missed — the single-probe contract of the
+        serving layer. Coalescing still applies, so a concurrent
+        same-digest computation is joined, not repeated."""
         # count as an active run for the whole body: the emulation-queue
         # teardown in join_pending must not shut down a pool this call
         # is about to dispatch on — direct deferred run_point calls need
@@ -489,14 +523,16 @@ class SweepExecutor:
         with self._lock:
             self._active_runs += 1
         try:
-            return self._run_point(point, extra, defer_emulation, pending)
+            return self._run_point(point, extra, defer_emulation, pending,
+                                   assume_cold)
         finally:
             with self._lock:
                 self._active_runs -= 1
 
     def _run_point(self, point, extra: Optional[Dict],
                    defer_emulation: bool,
-                   pending: Optional[List[Future]]) -> Dict:
+                   pending: Optional[List[Future]],
+                   assume_cold: bool = False) -> Dict:
         spec = self.resolve(point)
         digest = spec.digest()
         with self._lock:
@@ -519,7 +555,7 @@ class SweepExecutor:
             return self._finish_record(rec, extra)
         try:
             emu_fut = None
-            rec = self._store_lookup(digest)
+            rec = None if assume_cold else self._store_lookup(digest)
             if rec is None:
                 rec, emu_fut = self._compute_point(
                     spec, digest, defer_emulation, pending)
@@ -592,6 +628,7 @@ class SweepExecutor:
                    "cb_area": connection_box_area(ic),
                    "emulate_cycles": self.emulate_cycles,
                    "gen_pnr_seconds": time.perf_counter() - t0}
+            rec["metrics"] = record_metrics(rec)
             self._store_put(spec, rec)
             return rec, None
         with self._lock:
@@ -637,6 +674,10 @@ class SweepExecutor:
         # cache hits legitimately report the shared-cache speedup); with
         # deferred emulation it covers host PnR only — emulation overlaps
         rec["gen_pnr_seconds"] = time.perf_counter() - t0
+        # frontier-relevant scalars (area / critical path / routability)
+        # persist on the record so search and serving consumers never
+        # re-derive them from the app map
+        rec["metrics"] = record_metrics(rec)
         emu_fut = None
         if routed and defer_emulation:
             # persist only once the emulation report has merged — the
@@ -651,7 +692,8 @@ class SweepExecutor:
         return rec, emu_fut
 
     def run_points(self, points: Sequence[Tuple[Any, Dict]],
-                   record: bool = True) -> List[Dict]:
+                   record: bool = True,
+                   assume_cold: bool = False) -> List[Dict]:
         """The generic sweep driver: evaluate ``(point, extra)`` design
         points — points are :class:`InterconnectSpec` objects (see
         :func:`repro.core.spec.spec_grid` for declarative grids) or
@@ -667,7 +709,11 @@ class SweepExecutor:
 
         ``record=False`` skips the ``self.records`` accumulator (the
         :meth:`save_json` batch workflow) — long-lived callers like the
-        serving layer would otherwise grow it without bound."""
+        serving layer would otherwise grow it without bound.
+        ``assume_cold=True`` is the serving layer's single-probe path:
+        the caller already probed every point's digest and missed, so
+        leaders skip the redundant second probe (see :meth:`run_point`).
+        """
         workers = self.max_workers
         if workers is None:
             workers = min(len(points), os.cpu_count() or 1, 4)
@@ -678,12 +724,13 @@ class SweepExecutor:
         try:
             if workers <= 1 or len(points) <= 1:
                 recs = [self.run_point(kw, extra, defer_emulation=defer,
-                                       pending=pending)
+                                       pending=pending,
+                                       assume_cold=assume_cold)
                         for kw, extra in points]
             else:
                 with ThreadPoolExecutor(max_workers=workers) as pool:
                     futs = [pool.submit(self.run_point, kw, extra, defer,
-                                        pending)
+                                        pending, assume_cold)
                             for kw, extra in points]
                     recs = [f.result() for f in futs]
         finally:
@@ -693,6 +740,24 @@ class SweepExecutor:
         if record:
             self.records.extend(recs)
         return recs
+
+    def run_specs(self, specs: Sequence[Any], record: bool = False,
+                  assume_cold: bool = False) -> List[Dict]:
+        """Batch-evaluate bare specs (no per-point ``extra`` labels) —
+        the search driver's hook: one :meth:`run_points` call per
+        candidate batch, store-memoized, ``record=False`` by default so
+        adaptive query streams don't grow the accumulator."""
+        return self.run_points([(s, {}) for s in specs], record=record,
+                               assume_cold=assume_cold)
+
+    def stats(self) -> Dict[str, int]:
+        """Snapshot of the store/compute observability counters."""
+        with self._lock:
+            return {"store_hits": self.store_hits,
+                    "store_misses": self.store_misses,
+                    "coalesced": self.coalesced,
+                    "pnr_computations": self.pnr_computations,
+                    "analysis_rejections": self.analysis_rejections}
 
     @staticmethod
     def _record_key(rec: Dict) -> Tuple:

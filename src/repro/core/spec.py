@@ -289,6 +289,79 @@ def _json_safe(v: object) -> object:
     return v
 
 
+def spec_axes(base: InterconnectSpec,
+              axes: Dict[str, Sequence]) -> Dict[str, Tuple]:
+    """Canonicalize search/sweep axes over ``base``: every key must be a
+    spec field, and every value must produce a constructible spec (bad
+    values fail here, with the axis named, instead of deep inside a
+    sweep). Values are canonicalized through the spec's own coercion
+    (``"wilton"`` -> ``SwitchBoxType.WILTON``, lists -> tuples) and
+    deduplicated order-preserving — the axis order is the neighborhood
+    order the greedy selector walks."""
+    names = {f.name for f in fields(InterconnectSpec)}
+    out: Dict[str, Tuple] = {}
+    for name, values in axes.items():
+        if name not in names:
+            raise TypeError(f"unknown spec axis {name!r}; "
+                            f"valid fields: {sorted(names)}")
+        vals: List = []
+        for v in values:
+            try:
+                canon = getattr(replace(base, **{name: v}), name)
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    f"axis {name!r}: value {v!r} does not produce a "
+                    f"valid spec: {e}") from e
+            if canon not in vals:
+                vals.append(canon)
+        if not vals:
+            raise ValueError(f"axis {name!r} has no values")
+        out[name] = tuple(vals)
+    return out
+
+
+def mutate_spec(spec: InterconnectSpec, axes: Dict[str, Sequence],
+                rng) -> InterconnectSpec:
+    """Single-axis local mutation: pick one axis (uniformly among those
+    with an alternative to the spec's current value) and move it to a
+    different allowed value. The mutation primitive behind the greedy
+    and evolutionary DSE selectors; returns ``spec`` unchanged when no
+    axis offers an alternative (a one-point space)."""
+    movable = [n for n in axes
+               if any(v != getattr(spec, n) for v in axes[n])]
+    if not movable:
+        return spec
+    name = rng.choice(movable)
+    choices = [v for v in axes[name] if v != getattr(spec, name)]
+    return replace(spec, **{name: rng.choice(choices)})
+
+
+def neighbor_specs(spec: InterconnectSpec,
+                   axes: Dict[str, Sequence]
+                   ) -> List[InterconnectSpec]:
+    """The specs one axis step away from ``spec``: for each axis, the
+    values adjacent to the current value in the axis's ordered value
+    list (every axis value when the current value is off-axis).
+    Deterministic order — axis declaration order, lower neighbor first —
+    so seeded searches reproduce exactly."""
+    out: List[InterconnectSpec] = []
+    seen = {spec}
+    for name, vals in axes.items():
+        cur = getattr(spec, name)
+        vals = tuple(vals)
+        if cur in vals:
+            i = vals.index(cur)
+            adj = [vals[j] for j in (i - 1, i + 1) if 0 <= j < len(vals)]
+        else:
+            adj = list(vals)
+        for v in adj:
+            cand = replace(spec, **{name: v})
+            if cand not in seen:
+                seen.add(cand)
+                out.append(cand)
+    return out
+
+
 def spec_grid(base: InterconnectSpec,
               axes: Dict[str, Sequence],
               label: Optional[Callable[[InterconnectSpec], Dict]] = None

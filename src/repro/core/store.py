@@ -26,6 +26,18 @@ Durability rules:
   count as misses (and are tallied in ``stats()``), never raise;
 * the envelope carries a schema version stamp; unknown versions are
   treated as misses so future schema changes stay forward-compatible.
+
+Merge rules (the differing-app-set fix): :meth:`ResultStore.put`
+*merges* a record into any existing record for the same digest — app
+union, newest-wins per app — instead of whole-record last-writer-wins.
+Two executors alternating different app sets against one store used to
+overwrite each other's records forever (each saw only the other's apps,
+missed, recomputed, and clobbered); now the stored record accumulates
+every app ever computed for the digest and both converge on hits.
+Writers sharing one ``ResultStore`` object serialize the
+read-merge-write; independent processes race last-writer-wins on a
+single put but still converge, because every writer merges the other's
+apps in before replacing the file.
 """
 from __future__ import annotations
 
@@ -57,6 +69,69 @@ def default_store_root() -> str:
     return os.environ.get(STORE_ENV) or DEFAULT_ROOT
 
 
+def record_metrics(rec: Dict) -> Dict[str, float]:
+    """The frontier-relevant summary of a DSE record: the
+    (area, critical-path delay, routability) triple the search front end
+    (:mod:`repro.core.search`) optimizes over.
+
+    * ``area`` — SB + CB area of the design point;
+    * ``critical_path_ns`` — the *worst* critical path over the routed
+      apps (``inf`` when nothing routed: an unroutable point can never
+      dominate on delay);
+    * ``routability`` — routed apps / total apps in the record.
+
+    Stamped onto records at compute time and re-derived when an app-set
+    merge changes the app population, so store consumers (``recommend``,
+    external tooling) can rank records without reconstructing the
+    aggregation."""
+    apps = rec.get("apps") or {}
+    routed = [a for a in apps.values()
+              if isinstance(a, dict) and a.get("success")]
+    crit = float("inf")
+    if routed:
+        crit = max(float(a.get("critical_path_ns", float("inf")))
+                   for a in routed)
+    area = float(rec.get("sb_area") or 0.0) + \
+        float(rec.get("cb_area") or 0.0)
+    return {"area": area, "critical_path_ns": crit,
+            "routability": len(routed) / len(apps) if apps else 0.0}
+
+
+def _stamped_apps(rec: Dict) -> Dict[str, Dict]:
+    """Copy a record's app entries with the record-level
+    ``emulate_cycles`` claim stamped per app. A merged record holds apps
+    produced by writers with *different* emulation contexts, so the
+    record-level field alone can no longer vouch for every app — the
+    stamp preserves each app's own claim across merges (``None`` marks
+    an unknown claim, which emulating readers treat as a miss)."""
+    cycles = rec.get("emulate_cycles")
+    out: Dict[str, Dict] = {}
+    for name, entry in (rec.get("apps") or {}).items():
+        if isinstance(entry, dict):
+            entry = dict(entry)
+            entry.setdefault("emulate_cycles", cycles)
+        out[name] = entry
+    return out
+
+
+def merge_records(old: Dict, new: Dict) -> Dict:
+    """Merge ``new`` into ``old`` for the same digest: union of apps with
+    newest-wins per app; every other field newest-wins wholesale. Both
+    sides' app entries get per-app ``emulate_cycles`` stamps (see
+    :func:`_stamped_apps`) and the frontier metrics are recomputed over
+    the merged app population. Records without a dict app map fall back
+    to plain newest-wins."""
+    if not isinstance(old.get("apps"), dict) \
+            or not isinstance(new.get("apps"), dict):
+        return new
+    apps = _stamped_apps(old)
+    apps.update(_stamped_apps(new))
+    merged = dict(new, apps=apps)
+    if "metrics" in old or "metrics" in new:
+        merged["metrics"] = record_metrics(merged)
+    return merged
+
+
 def atomic_write_json(path: str, payload) -> None:
     """Same-directory temp file + ``os.replace``: readers only ever see
     absent or complete files, even across a writer crash. The shared
@@ -86,7 +161,9 @@ class ResultStore:
         self.root = os.path.abspath(root or default_store_root())
         self._records = os.path.join(self.root, "records")
         self._by_hw = os.path.join(self.root, "by_hardware")
-        self._lock = threading.Lock()
+        # re-entrant: put() holds it across its read-merge-write while
+        # the envelope load underneath counts corruption under it too
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.corrupt = 0
@@ -188,7 +265,8 @@ class ResultStore:
     # -------------------------------------------------------------- writes
     def put(self, spec_or_digest, record: Dict,
             hardware_digest: Optional[str] = None,
-            spec_dict: Optional[Dict] = None) -> str:
+            spec_dict: Optional[Dict] = None,
+            merge: bool = True) -> str:
         """Persist ``record`` under the design point's content address.
 
         Pass the :class:`InterconnectSpec` when available — the envelope
@@ -196,7 +274,15 @@ class ResultStore:
         can be re-queried or re-verified without the producing process)
         and the hardware index is maintained automatically. With a bare
         digest string, ``hardware_digest``/``spec_dict`` are optional
-        extras. Returns the digest written."""
+        extras. Returns the digest written.
+
+        With ``merge`` (the default) an existing record for the same
+        digest is *merged into*, not overwritten: app union, newest-wins
+        per app (see :func:`merge_records`) — the fix for executors with
+        differing app sets ping-ponging overwrites against one store.
+        ``merge=False`` restores whole-record replacement (e.g. to purge
+        a record known to be stale). The caller's ``record`` dict is
+        never mutated — merged app entries are copies."""
         if isinstance(spec_or_digest, InterconnectSpec):
             spec = spec_or_digest
             digest = spec.digest()
@@ -206,21 +292,30 @@ class ResultStore:
             digest = self._check_digest(spec_or_digest)
             if hardware_digest is not None:
                 self._check_digest(hardware_digest)
-        env = {"schema": SCHEMA_VERSION, "spec_digest": digest,
-               "hardware_digest": hardware_digest, "spec": spec_dict,
-               "record": record}
-        os.makedirs(self._records, exist_ok=True)
-        # index marker first: a crash between the two steps then leaves a
-        # dangling marker (for_hardware skips it — get() misses), never a
-        # committed record the index can't enumerate; unconditional create
-        # also avoids the exists-then-open race between writers
-        if hardware_digest is not None:
-            hw_dir = os.path.join(self._by_hw, hardware_digest)
-            os.makedirs(hw_dir, exist_ok=True)
-            with open(os.path.join(hw_dir, digest), "w"):
-                pass
-        atomic_write_json(self._record_path(digest), env)
+        path = self._record_path(digest)
+        # the read-merge-write is serialized per store object (cross-
+        # process writers race last-writer-wins but still converge: each
+        # merges the other's apps in before replacing the file)
         with self._lock:
+            if merge:
+                old = self._load_envelope(path)
+                if old is not None and old.get("spec_digest") == digest:
+                    record = merge_records(old["record"], record)
+            env = {"schema": SCHEMA_VERSION, "spec_digest": digest,
+                   "hardware_digest": hardware_digest, "spec": spec_dict,
+                   "record": record}
+            os.makedirs(self._records, exist_ok=True)
+            # index marker first: a crash between the two steps then
+            # leaves a dangling marker (for_hardware skips it — get()
+            # misses), never a committed record the index can't
+            # enumerate; unconditional create also avoids the
+            # exists-then-open race between writers
+            if hardware_digest is not None:
+                hw_dir = os.path.join(self._by_hw, hardware_digest)
+                os.makedirs(hw_dir, exist_ok=True)
+                with open(os.path.join(hw_dir, digest), "w"):
+                    pass
+            atomic_write_json(path, env)
             self.writes += 1
         return digest
 

@@ -22,8 +22,12 @@ Request lifecycle for ``query(spec | [specs])``:
 ``submit`` returns a future (the service runs queries on an internal
 pool), ``query_async`` bridges that future into asyncio, and
 ``stats()`` reports hit/miss/coalescing counts and query latency.
+``recommend(...)`` runs the search-driven optimizer
+(:mod:`repro.core.search`) on the service's executor — the cache
+becomes a recommendation engine.
 
 Construct via ``canal.serve(...)``.
+
 """
 from __future__ import annotations
 
@@ -146,9 +150,14 @@ class DSEService:
                 # one batched executor pass over the misses only: shared
                 # IR/resource caches, concurrent points, device emulation.
                 # record=False: the serving path must not grow the batch
-                # workflow's save_json accumulator without bound
+                # workflow's save_json accumulator without bound.
+                # assume_cold: the probe loop above already consulted the
+                # store for each of these digests — the executor trusts
+                # that verdict instead of probing a second time, so a
+                # cold point costs exactly one store read
                 recs = self.executor.run_points(
-                    [(s, {}) for s, _, _ in misses], record=False)
+                    [(s, {}) for s, _, _ in misses], record=False,
+                    assume_cold=True)
                 for (spec, digest, fut), rec in zip(misses, recs):
                     results[digest] = rec
                     release(digest, fut)
@@ -170,21 +179,14 @@ class DSEService:
         return [dict(results[d]) for d in digests]
 
     def _probe_store(self, digest: str) -> Optional[Dict]:
-        """Warm-path probe, delegating the record-usability predicate to
-        the executor (one definition of "covers this workload" — app set
-        + emulation context — shared with ``run_point``'s lookup).
-
-        A cold digest is probed here *and* again by the executor's own
-        ``_store_lookup`` inside ``run_points`` — so ``store.stats()``
-        counts two misses per cold point (one extra disk read, noise
-        next to the PnR it precedes); the service/executor counters
-        each count one."""
-        if self.store is None:
-            return None
-        rec = self.store.get(digest)
-        if rec is not None and self.executor.record_usable(rec):
-            return rec
-        return None
+        """Warm-path probe, delegating to :meth:`SweepExecutor.probe` —
+        one definition of "covers this workload" (app set + emulation
+        context, :meth:`SweepExecutor.record_usable`), one store read,
+        one hit/miss increment on the executor counters. Misses are
+        handed to ``run_points(..., assume_cold=True)``, which trusts
+        this verdict instead of probing again — each cold point hits
+        the store exactly once."""
+        return self.executor.probe(digest)
 
     # ---------------------------------------------------------------- async
     def submit(self, request: Request) -> Future:
@@ -196,6 +198,34 @@ class DSEService:
         """:meth:`query` bridged into asyncio (awaitable)."""
         import asyncio
         return await asyncio.wrap_future(self.submit(request))
+
+    # ------------------------------------------------------------ recommend
+    def recommend(self, base=None, axes: Optional[Dict] = None, *,
+                  objective: str = "area",
+                  constraints: Optional[Dict] = None,
+                  space: Any = None, selector: str = "greedy",
+                  budget: int = 32, batch_size: int = 4, seed: int = 0,
+                  selector_options: Optional[Dict] = None
+                  ) -> Dict[str, Any]:
+        """The serving verb for search-driven DSE: "cheapest spec that
+        routes these apps under delay D". Runs :func:`repro.core.search.
+        search` over ``axes`` around ``base`` (or a prebuilt ``space``)
+        on this service's executor — so candidates are store-memoized,
+        statically-invalid ones are pruned free, and repeated
+        recommendations are all store hits. Returns ``{"best": ...,
+        "frontier": [...], "stats": {...}}``; ``best`` is None when no
+        evaluated point satisfies ``constraints`` (e.g.
+        ``{"max_critical_path_ns": D, "min_routability": 1.0}``)."""
+        from repro.core.search import search
+        result = search(base, axes, space=space, selector=selector,
+                        objective=objective, constraints=constraints,
+                        budget=budget, batch_size=batch_size, seed=seed,
+                        executor=self.executor,
+                        selector_options=selector_options)
+        best = result.best(objective, constraints)
+        return {"best": best.to_dict() if best is not None else None,
+                "frontier": [p.to_dict() for p in result.frontier],
+                "stats": result.stats}
 
     # ----------------------------------------------------------------- misc
     def warm(self, requests: Sequence[Request]) -> Dict[str, int]:
@@ -227,14 +257,7 @@ class DSEService:
                 "hit_rate": self.hits / max(self.hits + self.misses, 1),
                 "latency_avg_s": self._latency_total / q,
                 "latency_max_s": self._latency_max,
-                "executor": {
-                    "store_hits": self.executor.store_hits,
-                    "store_misses": self.executor.store_misses,
-                    "coalesced": self.executor.coalesced,
-                    "pnr_computations": self.executor.pnr_computations,
-                    "analysis_rejections":
-                        self.executor.analysis_rejections,
-                },
+                "executor": self.executor.stats(),
                 "store": store_stats,
             }
 

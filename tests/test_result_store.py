@@ -550,6 +550,129 @@ def test_service_probe_failure_resolves_claimed_futures(tmp_path):
     svc.close()
 
 
+def test_service_cold_point_probes_store_exactly_once(tmp_path):
+    """Regression (the double-probe bug): a cold query used to probe
+    the store in the service AND again inside run_point — two disk
+    reads and two miss increments per cold point. The probe verdict is
+    now threaded through (``assume_cold``), so the counters are exact:
+    one store miss per cold point, one store hit per warm one."""
+    svc = canal.serve(store=str(tmp_path / "s"),
+                      apps={"pw": lambda: app_pointwise(1)},
+                      emulate_cycles=0, use_pallas=False, max_workers=1)
+    specs = [InterconnectSpec(**SMOKE),
+             InterconnectSpec(**dict(SMOKE, num_tracks=3))]
+    svc.query(specs)
+    assert svc.store.stats()["misses"] == len(specs)   # not 2x
+    assert svc.store.stats()["hits"] == 0
+    assert svc.executor.store_misses == len(specs)
+    assert svc.executor.store_hits == 0
+    svc.query(specs)
+    assert svc.store.stats()["misses"] == len(specs)   # unchanged
+    assert svc.store.stats()["hits"] == len(specs)
+    assert svc.executor.store_hits == len(specs)
+    assert svc.executor.pnr_computations == len(specs)
+    svc.close()
+
+
+def test_store_put_merges_app_records():
+    """Unit contract of the ping-pong fix: put() on an existing digest
+    unions app maps (newest wins per app), stamps per-app
+    emulate_cycles claims, and recomputes the frontier metrics."""
+    from repro.core.store import merge_records, record_metrics
+    old = {"apps": {"a": {"success": True, "critical_path_ns": 2.0},
+                    "b": {"success": False,
+                          "critical_path_ns": float("inf")}},
+           "emulate_cycles": 8, "sb_area": 10.0, "cb_area": 5.0,
+           "metrics": record_metrics(
+               {"apps": {}, "sb_area": 10.0, "cb_area": 5.0})}
+    new = {"apps": {"b": {"success": True, "critical_path_ns": 3.0},
+                    "c": {"success": True, "critical_path_ns": 1.0}},
+           "emulate_cycles": 4, "sb_area": 10.0, "cb_area": 5.0}
+    merged = merge_records(old, new)
+    assert set(merged["apps"]) == {"a", "b", "c"}
+    assert merged["apps"]["b"]["success"]              # newest wins
+    assert merged["apps"]["a"]["emulate_cycles"] == 8  # old claim kept
+    assert merged["apps"]["b"]["emulate_cycles"] == 4
+    assert merged["emulate_cycles"] == 4               # top-level: newest
+    m = merged["metrics"]
+    assert m["routability"] == 1.0 and m["area"] == 15.0
+    assert m["critical_path_ns"] == 3.0
+    # the caller's dicts were not mutated
+    assert "emulate_cycles" not in new["apps"]["b"]
+    assert "c" not in old["apps"]
+
+
+def test_store_alternating_app_sets_converge(tmp_path):
+    """Regression (the app-set ping-pong bug): executors with different
+    app sets sharing one store used to overwrite each other's records
+    for the same digest forever — every lookup a miss, every miss a
+    recompute. put() now merges, so after one computation per app set
+    the record covers the union and both executor kinds hit."""
+    store = ResultStore(str(tmp_path / "s"))
+    spec = InterconnectSpec(**SMOKE)
+    apps_a = {"pw": lambda: app_pointwise(1)}
+    apps_b = {"pw2": lambda: app_pointwise(2)}
+    ex_a = _executor(store, apps=apps_a)
+    ex_b = _executor(store, apps=apps_b)
+    ex_a.run_point(spec)
+    ex_b.run_point(spec)
+    assert ex_a.pnr_computations == 1 and ex_b.pnr_computations == 1
+
+    # alternate fresh executors of both kinds: all hits, zero PnR —
+    # the old last-writer-wins store would miss every single one
+    for apps, names in ((apps_a, {"pw"}), (apps_b, {"pw2"}),
+                        (apps_a, {"pw"}), (apps_b, {"pw2"})):
+        ex = _executor(store, apps=apps)
+        rec = ex.run_point(spec)
+        assert ex.pnr_computations == 0 and ex.store_hits == 1
+        assert set(rec["apps"]) == names        # filtered view
+        assert "emulation" in rec["apps"][next(iter(names))]
+    digest = ex_a.resolve(spec).digest()
+    assert set(store.get(digest)["apps"]) == {"pw", "pw2"}
+
+    # an executor wanting the union is also served by the merged record
+    ex_ab = _executor(store, apps=dict(apps_a, **apps_b))
+    ex_ab.run_point(spec)
+    assert ex_ab.pnr_computations == 0 and ex_ab.store_hits == 1
+
+
+def test_store_concurrent_alternating_app_sets(tmp_path):
+    """The merge under concurrency: threads alternating two app sets
+    against one shared store object converge to the union record with
+    exactly one PnR per app set (coalescing + merge, no thrash)."""
+    store = ResultStore(str(tmp_path / "s"))
+    spec = InterconnectSpec(**SMOKE)
+    apps_a = {"pw": lambda: app_pointwise(1)}
+    apps_b = {"pw2": lambda: app_pointwise(2)}
+    ex_a = _executor(store, apps=apps_a)
+    ex_b = _executor(store, apps=apps_b)
+    errs = []
+
+    def run(ex):
+        try:
+            ex.run_point(spec)
+        except BaseException as e:                # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=run, args=(ex,))
+               for ex in (ex_a, ex_b, ex_a, ex_b)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert not errs
+    # per executor: one computation total (its duplicate request hit
+    # the store or coalesced), never one per alternation
+    assert ex_a.pnr_computations <= 1 and ex_b.pnr_computations <= 1
+    digest = ex_a.resolve(spec).digest()
+    assert set(store.get(digest)["apps"]) == {"pw", "pw2"}
+    # convergence: fresh executors of both kinds are pure hits
+    for apps in (apps_a, apps_b):
+        ex = _executor(store, apps=apps)
+        ex.run_point(spec)
+        assert ex.pnr_computations == 0 and ex.store_hits == 1
+
+
 def test_canal_serve_is_the_front_door(tmp_path):
     from repro.serve.dse_service import DSEService
     svc = canal.serve(store=str(tmp_path / "s"), apps={},
