@@ -16,6 +16,7 @@ three.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
 
@@ -37,6 +38,19 @@ class AnalysisContext:
     #: lowered FabricModule when the caller has one — enables the
     #: scope="lowered" rules (structural equivalence, config sweep)
     fabric: Optional[object] = None
+    #: routed artifacts when the caller has a PnR result — enable the
+    #: scope="routed" rules (rv-deadlock, throughput-bound, sta-slack,
+    #: congestion-hotspot, x-propagation). ``packed`` is the
+    #: :class:`PackedGraph`, ``routing`` the :class:`RoutingResult`
+    #: (which carries its :class:`RoutingResources`), ``placement`` the
+    #: instance -> (x, y) map and ``timing`` the STA summary dict.
+    packed: Optional[object] = None
+    routing: Optional[object] = None
+    placement: Optional[Dict] = None
+    timing: Optional[Dict] = None
+    #: target clock period for slack checks; None = report-only (no
+    #: period to violate, so ``sta-slack`` stays silent)
+    clock_ns: Optional[float] = None
     _sources: Dict[int, Set[Node]] = field(default_factory=dict)
     _sinks: Dict[int, Set[Node]] = field(default_factory=dict)
     _fwd: Dict[int, Set[Node]] = field(default_factory=dict)
@@ -152,6 +166,11 @@ class AnalysisPass:
     description: str = ""
     scope: str = "ir"
     when: Callable[[AnalysisContext], bool] = lambda ctx: True
+    #: the severity this rule's findings carry when it flags a defect —
+    #: documentation for ``--list-rules`` and input to the rule-set
+    #: version stamp; the rule body remains free to emit lower
+    #: severities for secondary findings
+    default_severity: Severity = Severity.ERROR
 
 
 #: the rule registry, in registration order (report order follows it)
@@ -159,7 +178,8 @@ RULES: Dict[str, AnalysisPass] = {}
 
 
 def register_rule(name: str, description: str = "", scope: str = "ir",
-                  when: Callable[[AnalysisContext], bool] = lambda ctx: True
+                  when: Callable[[AnalysisContext], bool] = lambda ctx: True,
+                  default_severity: "str | Severity" = Severity.ERROR
                   ) -> Callable[[RuleFn], RuleFn]:
     """Decorator registering a rule function under a stable id — the
     analysis mirror of adding an :class:`IRPass` to ``DEFAULT_PASSES``.
@@ -167,9 +187,10 @@ def register_rule(name: str, description: str = "", scope: str = "ir",
     in tests) but third-party ids must not collide with built-ins."""
 
     def deco(fn: RuleFn) -> RuleFn:
-        RULES[name] = AnalysisPass(name=name, run=fn,
-                                   description=description, scope=scope,
-                                   when=when)
+        RULES[name] = AnalysisPass(
+            name=name, run=fn, description=description, scope=scope,
+            when=when,
+            default_severity=Severity.from_str(default_severity))
         return fn
     return deco
 
@@ -178,6 +199,20 @@ def rule_table(scope: Optional[str] = None) -> List[AnalysisPass]:
     """Registered rules (optionally one scope), registration-ordered."""
     return [r for r in RULES.values()
             if scope is None or r.scope == scope]
+
+
+def rule_set_version(scope: Optional[str] = None) -> str:
+    """Deterministic short hash of the registered rule set (ids, scopes,
+    descriptions, default severities). Stamped onto persisted analysis
+    verdicts (:class:`repro.core.dse.SweepExecutor`) so a record written
+    under an older rule set re-analyzes instead of serving a stale
+    verdict — adding, removing or re-documenting a rule changes the
+    stamp."""
+    h = hashlib.sha256()
+    for r in sorted(rule_table(scope), key=lambda r: r.name):
+        h.update(f"{r.name}\x00{r.scope}\x00{r.description}\x00"
+                 f"{int(r.default_severity)}\n".encode())
+    return h.hexdigest()[:12]
 
 
 def _resolve_spec(ic: Interconnect,
@@ -194,7 +229,13 @@ def analyze(ic: Interconnect,
             scope: str = "ir",
             severities: Optional[Dict[str, "str | Severity"]] = None,
             fail_on: Optional["str | Severity"] = None,
-            fabric: Optional[object] = None) -> AnalysisReport:
+            fabric: Optional[object] = None,
+            pnr: Optional[object] = None,
+            packed: Optional[object] = None,
+            routing: Optional[object] = None,
+            placement: Optional[Dict] = None,
+            timing: Optional[Dict] = None,
+            clock_ns: Optional[float] = None) -> AnalysisReport:
     """Run the registered analysis rules over an interconnect IR.
 
     ``spec`` enables spec-dependent rules when the IR was not produced
@@ -202,16 +243,31 @@ def analyze(ic: Interconnect,
     ``rules`` selects a subset by id (unknown ids raise — a misspelled
     CI config must fail loudly, not silently skip the check);
     ``severities`` remaps per-rule severity (project policy, e.g. demote
-    ``dead-mux`` to info); ``fail_on`` raises :class:`AnalysisError`
-    when any finding reaches that severity. This is the one driver
-    behind ``canal.compile(analyze=...)``, the DSE pre-screen and the
-    lint CLI.
+    ``dead-mux`` to info, or ``"off"`` to suppress a rule entirely;
+    unknown rule ids raise); ``fail_on`` raises :class:`AnalysisError`
+    when any finding reaches that severity. ``pnr`` (a successful
+    :class:`repro.core.pnr.PnRResult`) — or the individual ``packed`` /
+    ``routing`` / ``placement`` / ``timing`` artifacts — enables the
+    ``scope="routed"`` rules; ``clock_ns`` sets the target period the
+    slack rules check against. This is the one driver behind
+    ``canal.compile(analyze=...)``, the DSE pre-screen and the lint CLI.
     """
     if not isinstance(ic, Interconnect) and hasattr(ic, "interconnect"):
         spec = spec if spec is not None else getattr(ic, "spec", None)
         ic = ic.interconnect                     # a CompiledFabric
+    if pnr is not None:
+        packed = packed if packed is not None else \
+            getattr(pnr, "packed", None)
+        routing = routing if routing is not None else \
+            getattr(pnr, "routing", None)
+        placement = placement if placement is not None else \
+            getattr(pnr, "placement", None)
+        timing = timing if timing is not None else \
+            getattr(pnr, "timing", None)
     ctx = AnalysisContext(ic=ic, spec=_resolve_spec(ic, spec),
-                          fabric=fabric)
+                          fabric=fabric, packed=packed, routing=routing,
+                          placement=placement, timing=timing,
+                          clock_ns=clock_ns)
     if rules is None:
         selected = rule_table(None if scope == "all" else scope)
     else:
@@ -220,11 +276,21 @@ def analyze(ic: Interconnect,
             raise ValueError(f"unknown analysis rules {unknown}; "
                              f"registered: {sorted(RULES)}")
         selected = [RULES[r] for r in rules]
+    unknown_sev = sorted(set(severities or {}) - set(RULES))
+    if unknown_sev:
+        raise ValueError(f"unknown analysis rules in severities "
+                         f"{unknown_sev}; registered: {sorted(RULES)}")
+    suppressed = {k for k, v in (severities or {}).items()
+                  if isinstance(v, str) and v.lower() == "off"}
     overrides = {k: Severity.from_str(v)
-                 for k, v in (severities or {}).items()}
-    report = AnalysisReport(rules_run=tuple(r.name for r in selected))
+                 for k, v in (severities or {}).items()
+                 if k not in suppressed}
+    # suppressed rules did not run: leaving them out of rules_run keeps
+    # "clean" distinguishable from "not checked"
+    report = AnalysisReport(rules_run=tuple(
+        r.name for r in selected if r.name not in suppressed))
     for r in selected:
-        if not r.when(ctx):
+        if r.name in suppressed or not r.when(ctx):
             continue
         found = list(r.run(ctx))
         sev = overrides.get(r.name)

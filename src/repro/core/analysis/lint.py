@@ -29,10 +29,11 @@ import argparse
 import importlib
 import json
 import sys
+from dataclasses import replace
 from typing import List, Optional, Tuple
 
-from .diagnostics import Severity
-from .framework import RULES, analyze, rule_table
+from .diagnostics import AnalysisReport, Diagnostic, Severity
+from .framework import RULES, analyze, rule_set_version, rule_table
 
 USAGE_ERROR = 2
 
@@ -98,9 +99,11 @@ def _load_spec_file(path: str):
 
 
 def _list_rules() -> str:
-    lines = []
+    lines = [f"{'RULE':26s} {'SCOPE':8s} {'SEVERITY':8s} DESCRIPTION"]
     for r in rule_table():
-        lines.append(f"{r.name:26s} [{r.scope}] {r.description}")
+        lines.append(f"{r.name:26s} {r.scope:8s} "
+                     f"{r.default_severity.name.lower():8s} "
+                     f"{r.description}")
     return "\n".join(lines)
 
 
@@ -118,7 +121,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="comma-separated rule ids (default: all IR rules)")
     ap.add_argument("--fail-on", default="error",
                     choices=["info", "warn", "warning", "error"],
-                    help="severity that sets exit code 1 (default: error)")
+                    help="severity that sets exit code 1 — one of "
+                         "'info', 'warn'/'warning', 'error' "
+                         "(default: error)")
     ap.add_argument("--format", default="text",
                     choices=["text", "json"], help="report format")
     ap.add_argument("--output", "-o", default=None, metavar="FILE",
@@ -126,6 +131,24 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--lowered", action="store_true",
                     help="additionally run the post-lowering verification "
                          "rules (compiles the fabric; costs device time)")
+    ap.add_argument("--routed", action="store_true",
+                    help="additionally run the routed-scope rules: each "
+                         "design point is placed-and-routed on the --app "
+                         "benchmark(s) (costs PnR time); with --store, "
+                         "also audits the persisted routed verdicts")
+    ap.add_argument("--app", action="append", default=[], metavar="NAME",
+                    help="benchmark app(s) to place-and-route for "
+                         "--routed (default: pointwise; repeatable; see "
+                         "repro.core.pnr.app.BENCH_APPS)")
+    ap.add_argument("--clock", type=float, default=None, metavar="NS",
+                    help="target clock period for the routed sta-slack "
+                         "rule (default: no target — slack not gated)")
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="lint the result store at PATH: every record's "
+                         "persisted analysis verdict (and, with "
+                         "--routed, per-app routed verdicts) becomes a "
+                         "target — stale rule-set stamps and non-clean "
+                         "stored verdicts are findings")
     ap.add_argument("--per-pass", action="store_true", dest="per_pass",
                     help="attribute each finding to the pipeline pass "
                          "that introduced it (spec targets only; slower)")
@@ -141,9 +164,10 @@ def run(argv: Optional[List[str]] = None,
     if args.list_rules:
         print(_list_rules(), file=out)
         return 0
-    if not args.specs and not args.config:
-        print("error: no targets (pass SPEC.json files and/or --config "
-              "module:attr; see --help)", file=sys.stderr)
+    if not args.specs and not args.config and not args.store:
+        print("error: no targets (pass SPEC.json files, --config "
+              "module:attr and/or --store PATH; see --help)",
+              file=sys.stderr)
         return USAGE_ERROR
     rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
              if args.rules else None)
@@ -168,6 +192,11 @@ def run(argv: Optional[List[str]] = None,
             clean = report.ok(fail_on)
             worst_clean = worst_clean and clean
             results.append((origin, report, clean))
+        if args.store:
+            for origin, report in _lint_store(args.store, args.routed):
+                clean = report.ok(fail_on)
+                worst_clean = worst_clean and clean
+                results.append((origin, report, clean))
     except LintError as e:
         print(f"error: {e}", file=sys.stderr)
         return USAGE_ERROR
@@ -219,4 +248,124 @@ def _lint_one(obj, origin: str, rules, args):
             report.extend(lowered.diagnostics)
             report.rules_run = tuple(report.rules_run) + tuple(
                 lowered.rules_run)
+    if args.routed:
+        report.extend(_routed_findings(ic, spec, args))
+        report.rules_run = tuple(report.rules_run) + tuple(
+            r.name for r in rule_table(scope="routed"))
     return report
+
+
+def _routed_findings(ic, spec, args) -> List[Diagnostic]:
+    """Place-and-route the requested bench apps on the design point and
+    run the routed-scope rules over each result; findings are prefixed
+    with the app they came from."""
+    from ..pnr import place_and_route
+    from ..pnr.app import BENCH_APPS
+
+    names = args.app or ["pointwise"]
+    unknown = sorted(set(names) - set(BENCH_APPS))
+    if unknown:
+        raise LintError(f"unknown app(s) {unknown}; "
+                        f"one of {sorted(BENCH_APPS)}")
+    diags: List[Diagnostic] = []
+    for name in names:
+        try:
+            r = place_and_route(ic, BENCH_APPS[name](), alphas=(2.0,),
+                                sa_steps=60, sa_batch=16)
+            error = r.error if not r.success else None
+        except ValueError as e:       # unplaceable (app > fabric)
+            r, error = None, str(e)
+        if error is not None:
+            diags.append(Diagnostic(
+                "routed-verdict", Severity.WARNING,
+                f"app {name!r} could not be routed ({error}): the "
+                "routed rules did not run for it"))
+            continue
+        rep = analyze(ic, spec=spec, scope="routed", pnr=r,
+                      clock_ns=args.clock)
+        diags.extend(replace(d, message=f"app {name!r}: {d.message}")
+                     for d in rep.diagnostics)
+    return diags
+
+
+def _stored_diags(doc: dict) -> List[Diagnostic]:
+    """Rehydrate the diagnostics a store record persisted (they were
+    serialized with ``Diagnostic.to_dict``); malformed entries are
+    skipped — a corrupt record must not abort the audit."""
+    out: List[Diagnostic] = []
+    for d in doc.get("diagnostics") or []:
+        if not isinstance(d, dict):
+            continue
+        try:
+            out.append(Diagnostic(
+                rule=str(d.get("rule", "?")),
+                severity=Severity.from_str(d.get("severity", "error")),
+                message=str(d.get("message", "")),
+                width=d.get("width"),
+                tile=tuple(d["tile"]) if d.get("tile") else None,
+                node=d.get("node"), hint=d.get("hint"),
+                pass_name=d.get("pass_name")))
+        except (TypeError, ValueError):
+            continue
+    return out
+
+
+#: pseudo-rule ids of the store audit (these findings reflect *stored*
+#: verdicts, not a fresh analysis run)
+_STORE_AUDIT_RULES = ("stale-rule-set", "stored-verdict")
+
+
+def _lint_store(root: str, routed: bool
+                ) -> List[Tuple[str, AnalysisReport]]:
+    """Audit the persisted analysis verdicts of a result store: one
+    report per record. A record stamped by a different rule set is
+    stale (warning — the executor will recompute it on next use); a
+    stored non-clean verdict re-surfaces its persisted diagnostics;
+    with ``routed``, each routed app's persisted ``routed_analysis``
+    verdict is audited the same way."""
+    from ..store import ResultStore
+
+    store = ResultStore(root)
+    current = rule_set_version()
+    out: List[Tuple[str, AnalysisReport]] = []
+    for digest in store.digests():
+        rec = store.get(digest)
+        if rec is None:
+            continue
+        diags: List[Diagnostic] = []
+        analysis = rec.get("analysis")
+        if isinstance(analysis, dict):
+            stamp = analysis.get("rule_set")
+            if stamp != current:
+                diags.append(Diagnostic(
+                    "stale-rule-set", Severity.WARNING,
+                    f"record analyzed under rule set {stamp!r} but the "
+                    f"current rule set is {current!r}: the stored "
+                    "verdict is stale and will be recomputed on next "
+                    "executor use"))
+            if not analysis.get("clean", True):
+                diags.extend(_stored_diags(analysis))
+        if routed:
+            for name, entry in sorted((rec.get("apps") or {}).items()):
+                if not isinstance(entry, dict) \
+                        or not entry.get("success"):
+                    continue
+                ra = entry.get("routed_analysis")
+                if not isinstance(ra, dict):
+                    diags.append(Diagnostic(
+                        "stored-verdict", Severity.WARNING,
+                        f"app {name!r}: routed without a persisted "
+                        "routed-analysis verdict (record predates the "
+                        "routed analyzer)"))
+                elif not ra.get("clean", True):
+                    diags.extend(
+                        replace(d, message=f"app {name!r}: {d.message}")
+                        for d in _stored_diags(ra))
+        rules_run = _STORE_AUDIT_RULES + (tuple(
+            r.name for r in rule_table(scope="routed")) if routed else ())
+        out.append((f"store:{digest[:12]}",
+                    AnalysisReport(diagnostics=diags,
+                                   rules_run=rules_run)))
+    if not out:
+        raise LintError(f"--store {root}: no records to audit")
+    return out

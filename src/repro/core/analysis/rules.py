@@ -224,7 +224,8 @@ def rv_handshake(ctx: AnalysisContext) -> Iterator[Diagnostic]:
     "dead-mux",
     description="node whose output can never reach a core input "
                 "or boundary output (prune_dead_muxes convergence "
-                "cross-check)")
+                "cross-check)",
+    default_severity=Severity.WARNING)
 def dead_mux(ctx: AnalysisContext) -> Iterator[Diagnostic]:
     for g in ctx.graphs():
         live = ctx.reaches_sink(g)
@@ -256,7 +257,8 @@ def dead_mux(ctx: AnalysisContext) -> Iterator[Diagnostic]:
 @register_rule(
     "unreachable-node",
     description="node no core output or boundary input can ever "
-                "drive")
+                "drive",
+    default_severity=Severity.WARNING)
 def unreachable_node(ctx: AnalysisContext) -> Iterator[Diagnostic]:
     for g in ctx.graphs():
         fed = ctx.reachable_forward(g)
@@ -449,7 +451,8 @@ def sb_topology_conformance(ctx: AnalysisContext) -> Iterator[Diagnostic]:
 @register_rule(
     "static-routability",
     description="supply-vs-demand bound a router can never beat: "
-                "under-fed core tiles or a starved array bisection")
+                "under-fed core tiles or a starved array bisection",
+    default_severity=Severity.WARNING)
 def static_routability(ctx: AnalysisContext) -> Iterator[Diagnostic]:
     """Cheap necessary conditions for routing N-port applications,
     checked in milliseconds instead of a PathFinder run:

@@ -102,14 +102,22 @@ class CompiledFabric:
 
     # ------------------------------------------------------------- analysis
     def analyze(self, rules: Optional[Sequence[str]] = None,
-                fail_on: Optional[str] = None):
-        """(Re-)run the IR-scope static analyzer on this design point and
-        return the :class:`AnalysisReport` — for subsets or severities
-        beyond what the compile-time ``analyze=`` knob recorded in
-        :attr:`diagnostics`."""
+                fail_on: Optional[str] = None,
+                scope: str = "ir",
+                pnr=None,
+                clock_ns: Optional[float] = None,
+                severities: Optional[Dict[str, object]] = None):
+        """(Re-)run the static analyzer on this design point and return
+        the :class:`AnalysisReport` — for subsets or severities beyond
+        what the compile-time ``analyze=`` knob recorded in
+        :attr:`diagnostics`, or for other scopes: pass
+        ``scope="routed"`` with a ``pnr=`` :class:`PnRResult` to audit a
+        configured design (deadlock / throughput / slack / congestion /
+        X-propagation; add ``clock_ns=`` for a slack target)."""
         from .analysis import analyze as run_rules
         return run_rules(self._ic, spec=self.spec, rules=rules,
-                         fail_on=fail_on)
+                         scope=scope, pnr=pnr, clock_ns=clock_ns,
+                         severities=severities, fail_on=fail_on)
 
     def verify(self, rules: Optional[Sequence[str]] = None,
                fail_on: Optional[str] = "error",
@@ -145,7 +153,11 @@ class CompiledFabric:
         then the spec's folded knob (``spec.alphas``, ``spec.sa_steps``,
         ...), then the historical front-door default — so a fully-pinned
         spec (one whose ``digest()`` addresses the result store) routes
-        identically here and in the DSE executor."""
+        identically here and in the DSE executor.
+
+        On success the routed-scope analysis report is attached as
+        ``result.analysis`` (``analyze(scope="routed", ...)`` re-runs it
+        with a clock target or custom severities)."""
         from .pnr import place_and_route as pnr
         s = self.spec
 
@@ -158,15 +170,18 @@ class CompiledFabric:
         if (kwargs.get("split_fifo_ctrl_delay") is None
                 and s.split_fifo_ctrl_delay is not None):
             kwargs["split_fifo_ctrl_delay"] = s.split_fifo_ctrl_delay
-        return pnr(self._ic, app,
-                   alphas=pick(alphas, s.alphas, (1.0, 2.0, 4.0)),
-                   sa_steps=pick(sa_steps, s.sa_steps, 200),
-                   sa_batch=pick(sa_batch, s.sa_batch, 32),
-                   seed=pick(seed, s.seed, 0),
-                   resources=self.resources(
-                       pick(reg_penalty, s.reg_penalty, 4.0)),
-                   route_strategy=strategy,
-                   auto_min_tiles=s.auto_min_tiles, **kwargs)
+        result = pnr(self._ic, app,
+                     alphas=pick(alphas, s.alphas, (1.0, 2.0, 4.0)),
+                     sa_steps=pick(sa_steps, s.sa_steps, 200),
+                     sa_batch=pick(sa_batch, s.sa_batch, 32),
+                     seed=pick(seed, s.seed, 0),
+                     resources=self.resources(
+                         pick(reg_penalty, s.reg_penalty, 4.0)),
+                     route_strategy=strategy,
+                     auto_min_tiles=s.auto_min_tiles, **kwargs)
+        if result.success:
+            result.analysis = self.analyze(scope="routed", pnr=result)
+        return result
 
     # ------------------------------------------------------------ emulation
     def emulate(self, result, inputs: Dict[Union[str, Coord], np.ndarray],

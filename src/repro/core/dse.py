@@ -141,6 +141,10 @@ class SweepExecutor:
         #: one per *computed* rejection — store hits on a rejected record
         #: count as store_hits, not here
         self.analysis_rejections = 0
+        #: stored records refused because their analysis verdict was
+        #: produced by a different rule set (see :meth:`record_usable`);
+        #: each one re-analyzes (and re-routes) instead of serving stale
+        self.stale_rule_set = 0
         self._analysis_cache: Dict[Tuple, Any] = {}
 
     @staticmethod
@@ -437,6 +441,18 @@ class SweepExecutor:
         apps = rec.get("apps")
         if not isinstance(apps, dict) or not set(self.apps) <= set(apps):
             return False
+        # analysis verdicts are only as good as the rule set that
+        # produced them: a record stamped by an older (or no) rule set
+        # must re-analyze, not serve a stale clean/rejected verdict.
+        # Records with no analysis dict at all predate the analyzer and
+        # carry no verdict to go stale.
+        analysis = rec.get("analysis")
+        if isinstance(analysis, dict):
+            from .analysis import rule_set_version
+            if analysis.get("rule_set") != rule_set_version():
+                with self._lock:
+                    self.stale_rule_set += 1
+                return False
         if self.emulate_cycles == 0:
             return True
         rec_cycles = rec.get("emulate_cycles")
@@ -607,8 +623,12 @@ class SweepExecutor:
         # (the verdict persists — re-sweeps hit the store, not PnR) but
         # no PnR/emulation minutes. Free pruning for machine-generated
         # spec streams, where malformed points are routine.
+        from .analysis import rule_set_version
         report = self.analysis_report(spec, ic)
         analysis = report.to_dict(max_diagnostics=16)
+        # verdict provenance: which rule set judged this record (see
+        # record_usable — a stamp mismatch makes the record unusable)
+        analysis["rule_set"] = rule_set_version()
         if not report.ok():
             with self._lock:
                 self.analysis_rejections += 1
@@ -655,6 +675,19 @@ class SweepExecutor:
                 # resolved engine ("auto" calibration data, ROADMAP item)
                 "route_strategy": r.route_strategy,
             }
+            if r.success:
+                # routed-scope verdict + static metrics persist per app
+                # (inside the app entry, so they survive store merges —
+                # merge_records unions apps and recomputes record-level
+                # metrics from the merged population)
+                from .analysis import analyze as run_rules
+                from .analysis import routed_static_metrics
+                routed_rep = run_rules(ic, spec=spec.hardware_spec(),
+                                       scope="routed", pnr=r)
+                out[name]["routed_analysis"] = routed_rep.to_dict(
+                    max_diagnostics=4)
+                out[name].update(routed_static_metrics(
+                    r.packed, r.routing, r.placement))
             if r.success and self.emulate_cycles:
                 routed.append((name, r.packed, r))
         rec: Dict = {"spec_digest": digest,
@@ -757,7 +790,8 @@ class SweepExecutor:
                     "store_misses": self.store_misses,
                     "coalesced": self.coalesced,
                     "pnr_computations": self.pnr_computations,
-                    "analysis_rejections": self.analysis_rejections}
+                    "analysis_rejections": self.analysis_rejections,
+                    "stale_rule_set": self.stale_rule_set}
 
     @staticmethod
     def _record_key(rec: Dict) -> Tuple:

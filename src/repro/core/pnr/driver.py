@@ -33,6 +33,9 @@ class PnRResult:
     #: router engine that produced the winning route ("python"/"minplus");
     #: with strategy "auto" this records the resolved pick per point
     route_strategy: str = ""
+    #: routed-scope :class:`repro.core.analysis.AnalysisReport`, attached
+    #: by ``CompiledFabric.place_and_route`` (None when run standalone)
+    analysis: Optional[object] = None
 
     def route_edges(self) -> List[Tuple[Node, Node]]:
         assert self.routing is not None

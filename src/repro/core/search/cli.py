@@ -43,7 +43,8 @@ def build_parser() -> argparse.ArgumentParser:
     g.add_argument("--selector", default="greedy",
                    choices=["random", "greedy", "evolutionary"])
     g.add_argument("--objective", default="area",
-                   choices=["area", "critical_path_ns", "routability"])
+                   choices=["area", "critical_path_ns", "routability",
+                            "throughput", "min_slack_ns"])
     g.add_argument("--max-delay", type=float, default=None,
                    metavar="NS",
                    help="constraint: max critical path (ns)")
@@ -52,6 +53,14 @@ def build_parser() -> argparse.ArgumentParser:
     g.add_argument("--min-routability", type=float, default=None,
                    metavar="FRAC",
                    help="constraint: min routed-app fraction")
+    g.add_argument("--min-throughput", type=float, default=None,
+                   metavar="TOK",
+                   help="constraint: min static throughput bound "
+                        "(tokens/cycle, from the routed analyzer)")
+    g.add_argument("--min-slack", type=float, default=None,
+                   metavar="NS",
+                   help="constraint: min per-net slack (ns) against "
+                        "the reference clock")
     g.add_argument("--budget", type=int, default=32,
                    help="max candidates to evaluate (default 32)")
     g.add_argument("--batch", type=int, default=4,
@@ -104,6 +113,10 @@ def run(argv: Optional[List[str]] = None) -> int:
         constraints["max_area"] = ns.max_area
     if ns.min_routability is not None:
         constraints["min_routability"] = ns.min_routability
+    if ns.min_throughput is not None:
+        constraints["min_throughput"] = ns.min_throughput
+    if ns.min_slack is not None:
+        constraints["min_slack_ns"] = ns.min_slack
 
     apps = None
     if ns.apps:

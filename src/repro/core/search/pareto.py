@@ -16,12 +16,19 @@ from typing import Dict, List, Optional
 from ..spec import InterconnectSpec
 from ..store import record_metrics
 
-#: metric keys and their sense: True = minimize, False = maximize
+#: metric keys and their sense: True = minimize, False = maximize.
+#: ``throughput`` (static tokens/cycle bound) and ``min_slack_ns``
+#: (worst per-net slack vs the reference clock) come from the routed
+#: static analyzer and appear only on records whose apps carry the
+#: static stamps — the dominance/constraint machinery treats them as
+#: optional (see :func:`dominates` / :func:`satisfies`).
 METRIC_SENSE = {"area": True, "critical_path_ns": True,
-                "routability": False}
+                "routability": False, "throughput": False,
+                "min_slack_ns": False}
 
 #: constraint keys accepted by :func:`satisfies`
-CONSTRAINT_KEYS = ("max_area", "max_critical_path_ns", "min_routability")
+CONSTRAINT_KEYS = ("max_area", "max_critical_path_ns", "min_routability",
+                   "min_throughput", "min_slack_ns")
 
 
 @dataclass
@@ -44,21 +51,47 @@ class Evaluated:
         return out
 
 
+#: the always-present metric triple every record summarizes to
+_CORE_METRICS = ("area", "critical_path_ns", "routability")
+
+#: pessimistic fallbacks for the optional routed metrics when a point
+#: predates them: no throughput claim and no slack headroom — a point
+#: that never ran the routed analyzer cannot win on what it never
+#: measured
+_METRIC_DEFAULTS = {"area": float("inf"),
+                    "critical_path_ns": float("inf"),
+                    "routability": 0.0, "throughput": 0.0,
+                    "min_slack_ns": float("-inf")}
+
+
 def point_metrics(record: Dict) -> Dict[str, float]:
     """Frontier metrics of a DSE record: the stamped ``metrics`` field
-    when present (compute-time or merge-time stamp), else re-derived."""
+    when present (compute-time or merge-time stamp), else re-derived.
+    A stamp is honored for the keys it carries (it may be the exact
+    three-key shape of pre-routed-analyzer records, or carry the
+    optional ``throughput`` / ``min_slack_ns``); core keys it lacks are
+    filled from :func:`record_metrics`."""
     m = record.get("metrics")
-    if isinstance(m, dict) and set(METRIC_SENSE) <= set(m):
-        return {k: float(m[k]) for k in METRIC_SENSE}
+    if isinstance(m, dict) and set(_CORE_METRICS) <= set(m):
+        out = {k: float(m[k]) for k in METRIC_SENSE if k in m}
+        if len(out) < len(METRIC_SENSE):
+            derived = record_metrics(record)
+            for k, v in derived.items():
+                out.setdefault(k, float(v))
+        return out
     return record_metrics(record)
 
 
 def dominates(a: Dict[str, float], b: Dict[str, float]) -> bool:
     """Pareto dominance: ``a`` is no worse than ``b`` on every metric
     (<= on minimized, >= on maximized) and strictly better on at least
-    one. Ties on every metric dominate in neither direction."""
+    one. Ties on every metric dominate in neither direction. Only
+    metrics *both* points carry participate — the optional routed
+    metrics never disqualify a point that predates them."""
     strict = False
     for key, minimize in METRIC_SENSE.items():
+        if key not in a or key not in b:
+            continue
         av, bv = a[key], b[key]
         if minimize:
             if av > bv:
@@ -96,15 +129,19 @@ def objective_value(metrics: Dict[str, float], objective: str) -> float:
     if objective not in METRIC_SENSE:
         raise ValueError(f"unknown objective {objective!r}; "
                          f"one of {sorted(METRIC_SENSE)}")
-    v = float(metrics[objective])
+    v = float(metrics.get(objective, _METRIC_DEFAULTS[objective]))
     return v if METRIC_SENSE[objective] else -v
 
 
 def satisfies(metrics: Dict[str, float],
               constraints: Optional[Dict[str, float]]) -> bool:
     """Hard-constraint check: ``max_area``, ``max_critical_path_ns``,
-    ``min_routability``. Unknown keys raise (a typo'd constraint must
-    not silently admit everything)."""
+    ``min_routability``, ``min_throughput`` (static tokens/cycle bound
+    from the routed analyzer), ``min_slack_ns`` (worst per-net slack vs
+    the reference clock). Points lacking an optional routed metric get
+    the pessimistic default (no throughput, no slack) — a constraint on
+    what was never measured excludes them. Unknown keys raise (a typo'd
+    constraint must not silently admit everything)."""
     if not constraints:
         return True
     for key, bound in constraints.items():
@@ -114,6 +151,10 @@ def satisfies(metrics: Dict[str, float],
             ok = metrics["critical_path_ns"] <= bound
         elif key == "min_routability":
             ok = metrics["routability"] >= bound
+        elif key == "min_throughput":
+            ok = metrics.get("throughput", 0.0) >= bound
+        elif key == "min_slack_ns":
+            ok = metrics.get("min_slack_ns", float("-inf")) >= bound
         else:
             raise ValueError(f"unknown constraint {key!r}; "
                              f"one of {CONSTRAINT_KEYS}")

@@ -80,6 +80,21 @@ def record_metrics(rec: Dict) -> Dict[str, float]:
       dominate on delay);
     * ``routability`` — routed apps / total apps in the record.
 
+    Records whose app entries carry the routed-scope static metrics
+    (``static_ii`` / ``min_slack_ns``, stamped per app by the executor)
+    additionally summarize to:
+
+    * ``throughput`` — the *worst* static throughput bound over the
+      routed apps, in tokens/cycle (``1 / static_ii``; 0.0 when nothing
+      routed or a loop deadlocks);
+    * ``min_slack_ns`` — the worst per-net slack over the routed apps
+      against the fixed reference clock
+      (:data:`repro.core.analysis.DEFAULT_CLOCK_NS`).
+
+    These two appear only when at least one app entry carries the static
+    fields, so records written before the routed analyzer keep their
+    exact three-key shape.
+
     Stamped onto records at compute time and re-derived when an app-set
     merge changes the app population, so store consumers (``recommend``,
     external tooling) can rank records without reconstructing the
@@ -93,8 +108,27 @@ def record_metrics(rec: Dict) -> Dict[str, float]:
                    for a in routed)
     area = float(rec.get("sb_area") or 0.0) + \
         float(rec.get("cb_area") or 0.0)
-    return {"area": area, "critical_path_ns": crit,
-            "routability": len(routed) / len(apps) if apps else 0.0}
+    metrics = {"area": area, "critical_path_ns": crit,
+               "routability": len(routed) / len(apps) if apps else 0.0}
+    if any(isinstance(a, dict)
+           and ("static_ii" in a or "min_slack_ns" in a)
+           for a in apps.values()):
+        if routed:
+            # worst-case over apps; an app predating the static stamps
+            # defaults to the unconstrained values (II=1, slack vs the
+            # reference clock) rather than poisoning the aggregate
+            from .analysis import DEFAULT_CLOCK_NS
+            metrics["throughput"] = min(
+                (1.0 / ii if (ii := float(a.get("static_ii", 1.0))) > 0
+                 and ii != float("inf") else 0.0)
+                for a in routed)
+            metrics["min_slack_ns"] = min(
+                float(a.get("min_slack_ns",
+                            DEFAULT_CLOCK_NS - crit)) for a in routed)
+        else:
+            metrics["throughput"] = 0.0
+            metrics["min_slack_ns"] = float("-inf")
+    return metrics
 
 
 def _stamped_apps(rec: Dict) -> Dict[str, Dict]:
