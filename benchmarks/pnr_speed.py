@@ -1,6 +1,6 @@
 """PnR speed: the device-accelerated PathFinder vs the Python A* oracle.
 
-Two measurements, persisted as ``BENCH_pnr.json``:
+Three measurements, persisted as ``BENCH_pnr.json``:
 
 * ``routing`` — routed nets/sec on a shared placement of the benchmark
   apps over a >=8x8 mesh with >=5 tracks: ``strategy="python"``
@@ -8,6 +8,11 @@ Two measurements, persisted as ``BENCH_pnr.json``:
   Bellman-Ford coarse cost fields as A* lower bounds). Both run on the
   same cached ``RoutingResources``; the headline number is the speedup
   of the tile-coarsened batched path (acceptance: >=2x).
+* ``placement`` — annealing steps/sec at an equal step budget:
+  ``strategy="python"`` (host SA, one chain, one device round-trip per
+  step) vs ``strategy="batched"`` (K parallel-tempering chains as one
+  jitted ``lax.scan``). Same chain/batch population; also records the
+  final Eq. 2 cost ratio (acceptance: >=3x faster, ratio <= 1).
 * ``sweep`` — end-to-end ``SweepExecutor`` wall time for a small track
   sweep (PnR + batched emulation) per strategy, with the async
   PnR/emulation pipeline on, so router gains survive to the sweep level.
@@ -83,6 +88,56 @@ def routing_speed(width: int = 8, height: int = 8, num_tracks: int = 5,
     return rec
 
 
+def place_speed(width: int = 8, height: int = 8,
+                quick: bool = False) -> Dict:
+    """Host SA vs device-resident parallel-tempering chains: annealing
+    steps/sec at an equal step budget and chain population, plus the
+    final Eq. 2 cost ratio (batched / host, lower is better)."""
+    from repro.core.pnr.app import BENCH_APPS
+    from repro.core.pnr.batched_anneal import batched_place, eq2_cost
+    from repro.core.pnr.detailed_place import detailed_place
+    from repro.core.pnr.global_place import assign_ios, global_place, legalize
+    from repro.core.pnr.packing import pack
+
+    app_name = "butterfly"
+    steps = 60 if quick else 120
+    chains = 16
+    packed = pack(BENCH_APPS[app_name]())
+    fixed = assign_ios(packed, width, height)
+    cont = global_place(packed, width, height, fixed=fixed, seed=0)
+    base = legalize(packed, cont, width, height, io_ring=True, fixed=fixed)
+
+    # warm both engines so neither pays jit compilation in the timed run
+    batched_place(packed, base, width, height, io_ring=True,
+                  n_steps=steps, n_chains=chains, seed=0)
+    detailed_place(packed, base, width, height, io_ring=True, n_steps=2,
+                   batch=chains, seed=0)
+
+    t0 = time.perf_counter()
+    pl_b, cost_b = batched_place(packed, base, width, height,
+                                 io_ring=True, n_steps=steps,
+                                 n_chains=chains, seed=0,
+                                 return_cost=True)
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    pl_h = detailed_place(packed, base, width, height, io_ring=True,
+                          n_steps=steps, batch=chains, seed=0)
+    t_host = time.perf_counter() - t0
+    cost_h = float(eq2_cost(packed, pl_h, width, height))
+
+    return {"width": width, "height": height, "app": app_name,
+            "steps": steps, "chains": chains,
+            "python": {"seconds": t_host,
+                       "steps_per_sec": steps / max(t_host, 1e-9),
+                       "final_cost": cost_h},
+            "batched": {"seconds": t_batched,
+                        "steps_per_sec": steps / max(t_batched, 1e-9),
+                        "final_cost": float(cost_b)},
+            "speedup": t_host / max(t_batched, 1e-9),
+            "cost_ratio": float(cost_b) / max(cost_h, 1e-9)}
+
+
 def sweep_speed(quick: bool = False) -> Dict:
     """End-to-end SweepExecutor wall time per router strategy (async
     emulation pipeline on): the router win at the DSE-sweep level."""
@@ -133,6 +188,22 @@ def run(quick: bool = False):
     assert route_rec["speedup"] >= 1.2, \
         "batched min-plus router must beat the Python A* baseline"
 
+    place_rec = place_speed(quick=quick)
+    lines.append(emit(
+        f"pnr_speed/place_{place_rec['width']}x{place_rec['height']}"
+        f"_k{place_rec['chains']}",
+        place_rec["batched"]["seconds"] * 1e6,
+        f"python={place_rec['python']['steps_per_sec']:.0f}st/s "
+        f"batched={place_rec['batched']['steps_per_sec']:.0f}st/s "
+        f"speedup={place_rec['speedup']:.1f}x "
+        f"cost_ratio={place_rec['cost_ratio']:.3f}"))
+    # acceptance is >=3x with equal-or-better final cost; the asserted
+    # floors leave noise headroom on shared runners
+    assert place_rec["speedup"] >= 1.5, \
+        "batched annealing chains must beat the host SA loop"
+    assert place_rec["cost_ratio"] <= 1.05, \
+        "batched annealing must not regress final Eq. 2 cost"
+
     sweep_rec = sweep_speed(quick=quick)
     lines.append(emit(
         "pnr_speed/sweep_8x8",
@@ -140,12 +211,16 @@ def run(quick: bool = False):
         f"python={sweep_rec['python']['seconds']:.2f}s "
         f"minplus={sweep_rec['minplus']['seconds']:.2f}s "
         f"speedup={sweep_rec['speedup']:.2f}x"))
-    save_json("BENCH_pnr", {"routing": route_rec, "sweep": sweep_rec})
+    save_json("BENCH_pnr", {"routing": route_rec, "placement": place_rec,
+                            "sweep": sweep_rec})
     # repo-root perf trajectory (append-style; one record per run)
     append_bench("BENCH_pnr", {
         "route_speedup": route_rec["speedup"],
         "minplus_nets_per_sec": route_rec["minplus"]["nets_per_sec"],
         "python_nets_per_sec": route_rec["python"]["nets_per_sec"],
+        "place_speedup": place_rec["speedup"],
+        "place_cost_ratio": place_rec["cost_ratio"],
+        "batched_steps_per_sec": place_rec["batched"]["steps_per_sec"],
         "sweep_speedup": sweep_rec["speedup"],
         "sweep_minplus_seconds": sweep_rec["minplus"]["seconds"],
     })

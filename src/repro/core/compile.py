@@ -146,6 +146,7 @@ class CompiledFabric:
                         seed: Optional[int] = None,
                         reg_penalty: Optional[float] = None,
                         route_strategy: Optional[str] = None,
+                        place_strategy: Optional[str] = None,
                         **kwargs):
         """Pack, place and route ``app`` on this fabric (paper §3.4).
 
@@ -167,6 +168,7 @@ class CompiledFabric:
             return spec_value if spec_value is not None else default
 
         strategy = (route_strategy or s.route_strategy or "auto")
+        p_strat = (place_strategy or s.place_strategy or "auto")
         if (kwargs.get("split_fifo_ctrl_delay") is None
                 and s.split_fifo_ctrl_delay is not None):
             kwargs["split_fifo_ctrl_delay"] = s.split_fifo_ctrl_delay
@@ -178,7 +180,8 @@ class CompiledFabric:
                      resources=self.resources(
                          pick(reg_penalty, s.reg_penalty, 4.0)),
                      route_strategy=strategy,
-                     auto_min_tiles=s.auto_min_tiles, **kwargs)
+                     auto_min_tiles=s.auto_min_tiles,
+                     place_strategy=p_strat, **kwargs)
         if result.success:
             result.analysis = self.analyze(scope="routed", pnr=result)
         return result

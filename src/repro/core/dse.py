@@ -94,6 +94,7 @@ class SweepExecutor:
                  emulate_cycles: int = 0, use_pallas: bool = True,
                  shard: Optional[bool] = None, seed: int = _UNSET,
                  route_strategy: str = "auto",
+                 place_strategy: str = "auto",
                  reg_penalty: float = _UNSET,
                  pipeline_emulation: bool = True,
                  io_chunk: Optional[int] = None,
@@ -112,6 +113,9 @@ class SweepExecutor:
         #: router engine (repro.core.pnr.route): "auto" routes big fabrics
         #: with the device-batched min-plus lower bounds
         self.route_strategy = route_strategy
+        #: placement engine (repro.core.pnr.detailed_place): "auto" anneals
+        #: big fabrics with the device-resident parallel-tempering chains
+        self.place_strategy = place_strategy
         self.reg_penalty = self._folded_knob("reg_penalty", reg_penalty)
         self.pipeline_emulation = pipeline_emulation
         #: ext-IO streaming chunk for long stimulus traces (HBM-gridded
@@ -414,6 +418,7 @@ class SweepExecutor:
         still pool across knob variants)."""
         return _as_spec(point).with_execution_defaults(
             route_strategy=self.route_strategy,
+            place_strategy=self.place_strategy,
             reg_penalty=self.reg_penalty, alphas=self.alphas,
             sa_steps=self.sa_steps, sa_batch=self.sa_batch,
             seed=self.seed,
@@ -639,7 +644,8 @@ class SweepExecutor:
                           "critical_path_ns": float("inf"),
                           "wirelength": 0, "route_iterations": 0,
                           "seconds": 0.0, "error": msg,
-                          "route_strategy": None}
+                          "route_strategy": None,
+                          "place_strategy": None}
                    for name in self.apps}
             rec = {"spec_digest": digest,
                    "hardware_digest": spec.hardware_digest(),
@@ -663,7 +669,8 @@ class SweepExecutor:
                 sa_batch=spec.sa_batch, resources=res, seed=spec.seed,
                 split_fifo_ctrl_delay=spec.split_fifo_ctrl_delay,
                 route_strategy=spec.route_strategy,
-                auto_min_tiles=spec.auto_min_tiles)
+                auto_min_tiles=spec.auto_min_tiles,
+                place_strategy=spec.place_strategy)
             out[name] = {
                 "success": r.success,
                 "critical_path_ns": r.timing.get("critical_path_ns",
@@ -672,8 +679,9 @@ class SweepExecutor:
                 "route_iterations": r.route_iterations,
                 "seconds": r.seconds,
                 "error": r.error,
-                # resolved engine ("auto" calibration data, ROADMAP item)
+                # resolved engines ("auto" calibration data, ROADMAP item)
                 "route_strategy": r.route_strategy,
+                "place_strategy": r.place_strategy,
             }
             if r.success:
                 # routed-scope verdict + static metrics persist per app

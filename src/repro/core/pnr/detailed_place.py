@@ -12,10 +12,24 @@ TPU adaptation: instead of one-move-at-a-time CPU annealing, we evaluate a
 cost (per-net bounding boxes via segment min/max + an occupancy integral
 image for the overlap term), then accept the best Metropolis-passing move.
 The per-net HPWL reduction is the Pallas kernel `repro.kernels.hpwl`.
+
+Two engines sit behind the ``strategy=`` knob (mirroring the router's
+``route_strategy``):
+
+* ``"python"`` — the host loop below: the differential oracle. One
+  chain, Python-side proposal, one device round-trip per step.
+* ``"batched"`` — :mod:`batched_anneal`: K parallel-tempering chains as
+  one jitted ``lax.scan`` device program (no per-step host sync).
+* ``"auto"`` — ``"batched"`` on fabrics with at least
+  ``_PLACE_AUTO_MIN_TILES`` tiles (env-overridable via
+  ``CANAL_PLACE_AUTO_MIN_TILES``), ``"python"`` below it, where the
+  host loop's lower fixed cost wins.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+import logging
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -23,6 +37,46 @@ import jax
 import jax.numpy as jnp
 
 from .packing import PackedGraph
+
+_log = logging.getLogger(__name__)
+
+#: "auto" strategy switches to the device-resident chains at this tile
+#: count. Default only — override per process via the
+#: CANAL_PLACE_AUTO_MIN_TILES env var (same calibration story as the
+#: router's CANAL_AUTO_MIN_TILES).
+_PLACE_AUTO_MIN_TILES = 49
+
+PLACE_STRATEGIES = ("python", "batched", "auto")
+
+
+def place_auto_min_tiles_threshold(explicit: Optional[int] = None) -> int:
+    """Resolve the "auto" placement threshold: explicit override >
+    ``CANAL_PLACE_AUTO_MIN_TILES`` env var > module default."""
+    if explicit is not None:
+        return int(explicit)
+    env = os.environ.get("CANAL_PLACE_AUTO_MIN_TILES")
+    if env is not None:
+        try:
+            return int(env)
+        except ValueError:
+            _log.warning("ignoring non-integer "
+                         "CANAL_PLACE_AUTO_MIN_TILES=%r", env)
+    return _PLACE_AUTO_MIN_TILES
+
+
+def resolve_place_strategy(n_tiles: int, strategy: str,
+                           auto_min_tiles: Optional[int] = None) -> str:
+    """Resolve a placement-strategy knob to a concrete engine name."""
+    if strategy in ("python", "batched"):
+        return strategy
+    if strategy == "auto":
+        threshold = place_auto_min_tiles_threshold(auto_min_tiles)
+        picked = "batched" if n_tiles >= threshold else "python"
+        _log.info("place strategy auto -> %s (%d tiles, threshold %d)",
+                  picked, n_tiles, threshold)
+        return picked
+    raise ValueError(f"unknown placement strategy {strategy!r}; "
+                     f"expected one of {PLACE_STRATEGIES}")
 
 
 class _Nets:
@@ -80,10 +134,24 @@ def detailed_place(packed: PackedGraph,
                    n_steps: int = 300, batch: int = 64,
                    t0: float = 2.0, t_min: float = 0.01,
                    seed: int = 0,
-                   use_pallas: bool = False
+                   use_pallas: bool = False,
+                   strategy: str = "python"
                    ) -> Dict[str, Tuple[int, int]]:
     """Anneal the legalized placement. Only movable (pe/mem) instances move;
-    swaps stay within compatible tile sets."""
+    swaps stay within compatible tile sets.
+
+    ``strategy`` selects the engine: the host loop below (``"python"``,
+    the oracle), the device-resident parallel-tempering chains
+    (``"batched"``, :func:`batched_anneal.batched_place` with
+    ``batch`` chains), or ``"auto"`` (tile-count switch)."""
+    strat = resolve_place_strategy(width * height, strategy)
+    if strat == "batched":
+        from .batched_anneal import batched_place
+        return batched_place(packed, placement, width, height,
+                             mem_columns=mem_columns, io_ring=io_ring,
+                             gamma=gamma, alpha=alpha, n_steps=n_steps,
+                             n_chains=batch, t0=t0, t_min=t_min,
+                             seed=seed)
     inst_order = list(packed.placeable)
     idx = {n: i for i, n in enumerate(inst_order)}
     nets = _Nets(packed, inst_order)
@@ -164,6 +232,9 @@ def detailed_place(packed: PackedGraph,
                                       jnp.asarray(cand_occ)))
         order = np.argsort(costs)
         # ---- accept the best Metropolis-passing proposal -----------------
+        # cheapest-first: each candidate gets its own Metropolis draw, and
+        # the first (i.e. best) passer is applied — a rejected candidate
+        # falls through to the next-best instead of ending the step
         for b in order:
             if descr[b] is None:
                 continue
@@ -177,7 +248,7 @@ def detailed_place(packed: PackedGraph,
                     cls = tile_class("", *new)
                     empties[cls].remove(new)
                     empties[tile_class("", *old)].append(old)
-            break
+                break
         temp *= decay
 
     return {n: (int(pos[idx[n], 0]), int(pos[idx[n], 1]))

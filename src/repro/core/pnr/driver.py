@@ -12,7 +12,7 @@ from repro.core.graph import Interconnect, Node
 from .app import AppGraph
 from .packing import PackedGraph, pack
 from .global_place import assign_ios, global_place, legalize
-from .detailed_place import detailed_place
+from .detailed_place import detailed_place, resolve_place_strategy
 from .route import (RoutingError, RoutingResources, RoutingResult, route_app)
 from .timing import sta_critical_path
 
@@ -33,6 +33,10 @@ class PnRResult:
     #: router engine that produced the winning route ("python"/"minplus");
     #: with strategy "auto" this records the resolved pick per point
     route_strategy: str = ""
+    #: placement engine that annealed the winning placement
+    #: ("python" host SA / "batched" device chains); "auto" resolves
+    #: once per point and the pick is recorded here
+    place_strategy: str = ""
     #: routed-scope :class:`repro.core.analysis.AnalysisReport`, attached
     #: by ``CompiledFabric.place_and_route`` (None when run standalone)
     analysis: Optional[object] = None
@@ -51,7 +55,8 @@ def place_and_route(ic: Interconnect, app: AppGraph,
                     seed: int = 0,
                     resources: Optional[RoutingResources] = None,
                     route_strategy: str = "python",
-                    auto_min_tiles: Optional[int] = None) -> PnRResult:
+                    auto_min_tiles: Optional[int] = None,
+                    place_strategy: str = "python") -> PnRResult:
     """Run the full three-stage PnR flow, sweeping α and keeping the best
     post-route critical path (paper §3.4).
 
@@ -60,7 +65,14 @@ def place_and_route(ic: Interconnect, app: AppGraph,
     device-batched coarse lower bounds, or ``"auto"`` (tile-count switch,
     threshold overridable via ``auto_min_tiles`` /
     ``CANAL_AUTO_MIN_TILES``; the resolved engine is recorded on
-    ``PnRResult.route_strategy``)."""
+    ``PnRResult.route_strategy``).
+
+    ``place_strategy`` selects the annealing-placement engine (see
+    ``repro.core.pnr.detailed_place``): ``"python"`` host SA oracle,
+    ``"batched"`` device-resident parallel-tempering chains
+    (``sa_batch`` chains x ``sa_steps`` steps), or ``"auto"``
+    (tile-count switch at ``CANAL_PLACE_AUTO_MIN_TILES``; the resolved
+    engine is recorded on ``PnRResult.place_strategy``)."""
     t0 = time.perf_counter()
     W = int(ic.params.get("width", ic.dims()[0]))
     H = int(ic.params.get("height", ic.dims()[1]))
@@ -78,12 +90,17 @@ def place_and_route(ic: Interconnect, app: AppGraph,
     if resources is None:
         resources = RoutingResources(ic)
 
+    # resolve "auto" once per point so every alpha uses (and the result
+    # records) one engine
+    place_strat = resolve_place_strategy(W * H, place_strategy)
+
     best: Optional[PnRResult] = None
     last_err = ""
     for alpha in alphas:
         pl = detailed_place(packed, base_pl, W, H, mem_columns=mem_cols,
                             io_ring=io_ring, gamma=gamma, alpha=alpha,
-                            n_steps=sa_steps, batch=sa_batch, seed=seed)
+                            n_steps=sa_steps, batch=sa_batch, seed=seed,
+                            strategy=place_strat)
         try:
             routing = route_app(ic, packed, pl, max_iters=route_iters,
                                 res=resources, seed=seed,
@@ -100,7 +117,8 @@ def place_and_route(ic: Interconnect, app: AppGraph,
             timing=timing, alpha=alpha,
             wirelength=routing.total_wirelength(),
             route_iterations=routing.iterations,
-            route_strategy=routing.strategy)
+            route_strategy=routing.strategy,
+            place_strategy=place_strat)
         if best is None or (cand.timing["critical_path_ns"]
                             < best.timing["critical_path_ns"]):
             best = cand

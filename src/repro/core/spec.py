@@ -50,6 +50,7 @@ def sides_for(n: int) -> Tuple[Side, ...]:
 
 
 _ROUTE_STRATEGIES = (None, "python", "minplus", "auto")
+_PLACE_STRATEGIES = (None, "python", "batched", "auto")
 
 
 @dataclass(frozen=True)
@@ -104,6 +105,9 @@ class InterconnectSpec:
     sa_batch: Optional[int] = None             # annealing batch
     seed: Optional[int] = None                 # place/route RNG seed
     split_fifo_ctrl_delay: Optional[float] = None  # split-FIFO ctrl ns
+    #: placement engine: "python" host SA / "batched" device chains /
+    #: "auto" (tile-count switch); None = caller default
+    place_strategy: Optional[str] = None
 
     def __post_init__(self):
         # canonicalize before freezing semantics: str -> enum, dict/list ->
@@ -132,6 +136,10 @@ class InterconnectSpec:
             raise ValueError(
                 f"route_strategy must be one of {_ROUTE_STRATEGIES}, "
                 f"got {self.route_strategy!r}")
+        if self.place_strategy not in _PLACE_STRATEGIES:
+            raise ValueError(
+                f"place_strategy must be one of {_PLACE_STRATEGIES}, "
+                f"got {self.place_strategy!r}")
         if self.alphas is not None:
             object.__setattr__(self, "alphas",
                                tuple(float(a) for a in self.alphas))
@@ -201,7 +209,7 @@ class InterconnectSpec:
     #: growing the spec never drifts the digests of pre-existing design
     #: points (the committed golden fixtures included). Append-only.
     DIGEST_OPTIONAL = ("reg_penalty", "alphas", "sa_steps", "sa_batch",
-                       "seed", "split_fifo_ctrl_delay")
+                       "seed", "split_fifo_ctrl_delay", "place_strategy")
 
     def canonical_dict(self) -> Dict[str, object]:
         """The digest's view of the spec: :meth:`to_dict` minus any
@@ -231,7 +239,7 @@ class InterconnectSpec:
     EXECUTION_KNOBS = ("route_strategy", "auto_min_tiles",
                        "emulate_io_chunk", "reg_penalty", "alphas",
                        "sa_steps", "sa_batch", "seed",
-                       "split_fifo_ctrl_delay")
+                       "split_fifo_ctrl_delay", "place_strategy")
 
     def hardware_spec(self) -> "InterconnectSpec":
         """This spec with the execution knobs cleared: two points that

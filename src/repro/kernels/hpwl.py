@@ -1,4 +1,4 @@
-"""Pallas kernel: per-net half-perimeter wirelength (HPWL).
+"""Pallas kernels: per-net half-perimeter wirelength (HPWL) + bboxes.
 
 The detailed-placement annealer (§3.4, Eq. 2) evaluates batches of
 candidate moves; each evaluation reduces every net's pin bounding box. In
@@ -6,24 +6,36 @@ dense form the net pins are padded to (n_nets, K, 2) with +/- sentinel
 coordinates, and the kernel is a pure VPU reduction, tiled over nets —
 the ideal TPU shape for this workload (no scatter, no host sync).
 
-Validated in interpret mode against ``ref.hpwl_ref``.
+Two entry points share the blocking scheme:
+
+* ``hpwl`` — per-net half-perimeter wirelength, the Eq. 2 distance term.
+* ``net_bboxes`` — the underlying per-net (xmin, xmax, ymin, ymax)
+  boxes, which the device-resident annealer keeps as chain state (the
+  overlap term gathers an occupancy integral image at box corners).
+
+``interpret`` resolves per call from the active backend (compiled on
+TPU, interpret elsewhere — CPU has no Mosaic backend), exactly like
+``fabric_step`` / ``minplus``; pass an explicit bool to pin it.
+
+Validated against ``ref.hpwl_ref`` / ``ref.net_bboxes_ref``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .fabric_step import _default_interpret
+
 BLOCK_NETS = 256
 SENTINEL = 1 << 20
 
 
-def _hpwl_kernel(pins_ref, mask_ref, out_ref):
-    """pins: (BN, K, 2) int32; mask: (BN, K) int32; out: (BN,) int32."""
-    pins = pins_ref[...]
-    mask = mask_ref[...] > 0
+def _bbox_block(pins, mask):
+    """(BN, K, 2) pins + (BN, K) bool mask -> four (BN,) box edges."""
     big = jnp.int32(SENTINEL)
     x = pins[:, :, 0]
     y = pins[:, :, 1]
@@ -31,20 +43,40 @@ def _hpwl_kernel(pins_ref, mask_ref, out_ref):
     xmin = jnp.min(jnp.where(mask, x, big), axis=1)
     ymax = jnp.max(jnp.where(mask, y, -big), axis=1)
     ymin = jnp.min(jnp.where(mask, y, big), axis=1)
+    return xmin, xmax, ymin, ymax
+
+
+def _hpwl_kernel(pins_ref, mask_ref, out_ref):
+    """pins: (BN, K, 2) int32; mask: (BN, K) int32; out: (BN,) int32."""
+    mask = mask_ref[...] > 0
+    xmin, xmax, ymin, ymax = _bbox_block(pins_ref[...], mask)
     any_pin = jnp.any(mask, axis=1)
     out_ref[...] = jnp.where(any_pin,
                              (xmax - xmin) + (ymax - ymin), 0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def hpwl(pins: jnp.ndarray, mask: jnp.ndarray,
-         interpret: bool = True) -> jnp.ndarray:
-    """pins: (n_nets, K, 2) int32 padded pin coords; mask: (n_nets, K).
-    Returns per-net HPWL (n_nets,) int32."""
-    n, k, _ = pins.shape
+def _bbox_kernel(pins_ref, mask_ref, out_ref):
+    """Like ``_hpwl_kernel`` but emits the boxes: out (BN, 4) int32 as
+    (xmin, xmax, ymin, ymax); empty nets collapse to the zero box."""
+    mask = mask_ref[...] > 0
+    xmin, xmax, ymin, ymax = _bbox_block(pins_ref[...], mask)
+    any_pin = jnp.any(mask, axis=1)
+    box = jnp.stack([xmin, xmax, ymin, ymax], axis=1)
+    out_ref[...] = jnp.where(any_pin[:, None], box, 0)
+
+
+def _pad_nets(pins, mask):
+    n = pins.shape[0]
     n_pad = pl.cdiv(n, BLOCK_NETS) * BLOCK_NETS
     pins_p = jnp.pad(pins, ((0, n_pad - n), (0, 0), (0, 0)))
     mask_p = jnp.pad(mask.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
+    return pins_p, mask_p, n_pad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _hpwl_jit(pins, mask, interpret: bool) -> jnp.ndarray:
+    n, k, _ = pins.shape
+    pins_p, mask_p, n_pad = _pad_nets(pins, mask)
     out = pl.pallas_call(
         _hpwl_kernel,
         grid=(n_pad // BLOCK_NETS,),
@@ -57,6 +89,47 @@ def hpwl(pins: jnp.ndarray, mask: jnp.ndarray,
         interpret=interpret,
     )(pins_p, mask_p)
     return out[:n]
+
+
+def hpwl(pins: jnp.ndarray, mask: jnp.ndarray,
+         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """pins: (n_nets, K, 2) int32 padded pin coords; mask: (n_nets, K).
+    Returns per-net HPWL (n_nets,) int32.
+
+    ``interpret=None`` resolves from the backend *before* the jit
+    boundary (the jit cache keys on the resolved bool): compiled on
+    TPU, interpret mode everywhere else."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _hpwl_jit(pins, mask, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _bbox_jit(pins, mask, interpret: bool) -> jnp.ndarray:
+    n, k, _ = pins.shape
+    pins_p, mask_p, n_pad = _pad_nets(pins, mask)
+    out = pl.pallas_call(
+        _bbox_kernel,
+        grid=(n_pad // BLOCK_NETS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_NETS, k, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLOCK_NETS, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_NETS, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 4), jnp.int32),
+        interpret=interpret,
+    )(pins_p, mask_p)
+    return out[:n]
+
+
+def net_bboxes(pins: jnp.ndarray, mask: jnp.ndarray,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Per-net bounding boxes (n_nets, 4) int32 as (xmin, xmax, ymin,
+    ymax); a net with no live pins is the zero box. Same backend-resolved
+    ``interpret`` contract as :func:`hpwl`."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _bbox_jit(pins, mask, interpret)
 
 
 def pack_nets(pin_net, pin_xy, n_nets: int, k_max: int):

@@ -66,6 +66,11 @@ def hpwl(pins: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return _hpwl.hpwl(pins, mask, interpret=_interpret())
 
 
+def net_bboxes(pins: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-net (xmin, xmax, ymin, ymax) pin bounding boxes."""
+    return _hpwl.net_bboxes(pins, mask, interpret=_interpret())
+
+
 def minplus_step(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return _minplus.minplus_step(d, w, interpret=_interpret())
 

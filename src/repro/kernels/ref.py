@@ -71,6 +71,20 @@ def hpwl_ref(pins: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(m.any(axis=1), (xmax - xmin) + (ymax - ymin), 0)
 
 
+def net_bboxes_ref(pins: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-net (xmin, xmax, ymin, ymax) boxes; empty nets -> zero box."""
+    big = jnp.int32(1 << 20)
+    m = mask > 0
+    x, y = pins[:, :, 0], pins[:, :, 1]
+    box = jnp.stack([
+        jnp.min(jnp.where(m, x, big), axis=1),
+        jnp.max(jnp.where(m, x, -big), axis=1),
+        jnp.min(jnp.where(m, y, big), axis=1),
+        jnp.max(jnp.where(m, y, -big), axis=1),
+    ], axis=1)
+    return jnp.where(m.any(axis=1)[:, None], box, 0)
+
+
 def minplus_ref(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """min(d, min_i(d_i + w_ij)) batched over rows of d."""
     return jnp.minimum(d, jnp.min(d[:, :, None] + w[None], axis=1))

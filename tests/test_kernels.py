@@ -87,6 +87,47 @@ def test_hpwl_property(n_nets, k, seed):
     assert (got >= 0).all()
 
 
+@given(st.integers(1, 300), st.integers(1, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_net_bboxes_property(n_nets, k, seed):
+    rng = np.random.default_rng(seed)
+    pins = jnp.asarray(rng.integers(0, 64, (n_nets, k, 2))
+                       .astype(np.int32))
+    # sparse mask so fully-empty rows actually occur
+    mask = jnp.asarray((rng.random((n_nets, k)) < 0.5).astype(np.int32))
+    got = np.asarray(ops.net_bboxes(pins, mask))
+    want = np.asarray(ref.net_bboxes_ref(pins, mask))
+    np.testing.assert_array_equal(got, want)
+    # bbox spans reproduce the HPWL kernel's reduction
+    span = (got[:, 1] - got[:, 0]) + (got[:, 3] - got[:, 2])
+    np.testing.assert_array_equal(span, np.asarray(ops.hpwl(pins, mask)))
+
+
+def test_hpwl_empty_net_rows():
+    """All-masked rows contribute zero HPWL and a zero bbox."""
+    pins = jnp.asarray(np.arange(3 * 4 * 2, dtype=np.int32)
+                       .reshape(3, 4, 2))
+    mask = jnp.asarray(np.array([[1, 1, 0, 0],
+                                 [0, 0, 0, 0],
+                                 [1, 0, 1, 1]], np.int32))
+    got = np.asarray(ops.hpwl(pins, mask))
+    assert got[1] == 0
+    np.testing.assert_array_equal(got, np.asarray(ref.hpwl_ref(pins, mask)))
+    boxes = np.asarray(ops.net_bboxes(pins, mask))
+    np.testing.assert_array_equal(boxes[1], np.zeros(4, np.int32))
+
+
+def test_pack_nets_overflow():
+    from repro.kernels.hpwl import pack_nets
+
+    pin_net = [0, 0, 0]
+    pin_xy = [(0, 0), (1, 1), (2, 2)]
+    pins, mask = pack_nets(pin_net, pin_xy, n_nets=1, k_max=4)
+    assert pins.shape == (1, 4, 2) and int(mask.sum()) == 3
+    with pytest.raises(ValueError, match="exceeds"):
+        pack_nets(pin_net, pin_xy, n_nets=1, k_max=2)
+
+
 @pytest.mark.parametrize("n,b", [(64, 1), (200, 4), (300, 2)])
 def test_minplus(n, b):
     rng = np.random.default_rng(n + b)
